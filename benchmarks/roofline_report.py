@@ -1,0 +1,71 @@
+"""Dry-run roofline report (deliverables e+g): reads the artifacts written
+by launch/dryrun.py and prints the per-(arch x shape) roofline table.
+
+Checks: every supported cell compiled on BOTH meshes; the single-pod cells
+carry calibrated FLOP/byte/collective measurements; every cell fits 16 GB
+HBM per chip or is flagged.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from repro import configs
+from repro.configs.shapes import SHAPES, cell_supported
+from repro.launch.roofline import analyze, diagnosis, fmt_table, load_all
+
+ART = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+
+
+def run() -> dict:
+    recs = load_all(ART)
+    by_key = {(r["arch"], r["shape"], r["mesh"]): r for r in recs
+              if r.get("variant", "baseline") == "baseline"}
+    missing, rows = [], []
+    n_expected = 0
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_config(arch)
+        for shape in SHAPES.values():
+            ok, _ = cell_supported(cfg, shape)
+            if not ok:
+                continue
+            n_expected += 1
+            for mesh in ("16x16", "2x16x16"):
+                if (arch, shape.name, mesh) not in by_key:
+                    missing.append((arch, shape.name, mesh))
+    for r in recs:
+        if r["mesh"] == "16x16" and r.get("variant") == "baseline":
+            a = analyze(r)
+            a["note"] = diagnosis(a)
+            rows.append(a)
+    return {"rows": rows, "missing": missing, "n_expected": n_expected,
+            "checks": {
+                "all_cells_compiled_both_meshes": not missing,
+                "calibrated_measurements_present": all(
+                    "calibrated" in r for r in recs
+                    if r["mesh"] == "16x16"
+                    and r.get("variant") == "baseline"),
+            }}
+
+
+def main() -> list[tuple]:
+    t0 = time.time()
+    out = run()
+    print(fmt_table(out["rows"]))
+    n_fit = sum(a["fits_16gb"] for a in out["rows"])
+    print(f"  {len(out['rows'])} single-pod cells analysed; "
+          f"{out['n_expected']} expected per mesh; "
+          f"{n_fit} fit 16GB/chip (see EXPERIMENTS.md for the others)")
+    if out["missing"]:
+        print("  MISSING:", out["missing"][:10])
+    failed = [k for k, v in out["checks"].items() if not v]
+    print("claim checks:", "ALL PASS" if not failed else f"FAIL: {failed}")
+    return [("roofline_report", (time.time() - t0) * 1e6,
+             f"cells={len(out['rows'])};checks_failed={len(failed)}")]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract) after each
+benchmark's own human-readable summary.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from benchmarks import (anytime_tradeoff, case_study, kernel_bench,
+                            latency_variance, roofline_report, table4_grid,
+                            tradeoff_frontier)
+    suite = [
+        ("Fig2/3 latency variance", latency_variance),
+        ("Fig4 tradeoff frontier", tradeoff_frontier),
+        ("Table4 scheme grid", table4_grid),
+        ("Fig11 case study", case_study),
+        ("Fig12 anytime tradeoff", anytime_tradeoff),
+        ("Sec4.3 kernels", kernel_bench),
+        ("Dry-run roofline", roofline_report),
+    ]
+    if quick:
+        suite = [s for s in suite
+                 if s[1] not in (anytime_tradeoff, table4_grid)]
+    all_rows = []
+    t0 = time.time()
+    for title, mod in suite:
+        print(f"\n=== {title} ({mod.__name__}) ===")
+        try:
+            rows = mod.main()
+        except Exception as e:  # keep the harness running
+            print(f"  ERROR: {e!r}")
+            rows = [(mod.__name__.split(".")[-1], 0.0, f"error={e!r}")]
+        all_rows.extend(rows)
+    print(f"\ntotal wall time: {time.time() - t0:.0f}s")
+    print("\nname,us_per_call,derived")
+    for name, us, derived in all_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Paper Fig. 4: the latency/accuracy tradeoff space of the model family.
+
+Claims validated (paper Q4/Q5):
+  Q4  the family spans a wide spectrum: fastest/slowest latency ratio large
+      (paper: ~12x over 42 ImageNet models), best/worst error ratio large
+      (paper: ~7.8x);
+  Q5  no single network dominates: the convex hull (lower-left frontier)
+      contains several models, and at least one model sits strictly above
+      the hull (sub-optimal tradeoff).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import family_table
+
+
+def lower_hull(points: list[tuple[float, float]]) -> list[int]:
+    """Indices on the lower-left staircase frontier (min error per latency)."""
+    order = np.argsort([p[0] for p in points])
+    hull, best_err = [], np.inf
+    for i in order:
+        if points[i][1] < best_err - 1e-12:
+            hull.append(int(i))
+            best_err = points[i][1]
+    return hull
+
+
+def run() -> dict:
+    table = family_table("image")
+    lat = table.latency[:, -1]
+    err = 1.0 - table.accuracies
+    pts = list(zip(lat, err))
+    hull = lower_hull(pts)
+    return {
+        "latency_ratio": float(lat.max() / lat.min()),
+        "error_ratio": float(err.max() / err.min()),
+        "n_models": len(pts),
+        "n_on_hull": len(hull),
+        "n_above_hull": len(pts) - len(hull),
+        "checks": {
+            "wide_latency_spectrum": lat.max() / lat.min() >= 8.0,
+            "wide_error_spectrum": err.max() / err.min() >= 2.0,
+            "no_dominating_model": len(hull) >= 3,
+            "suboptimal_models_exist": len(pts) - len(hull) >= 1,
+        },
+    }
+
+
+def main() -> list[tuple]:
+    t0 = time.time()
+    out = run()
+    print(f"  {out['n_models']} models: latency ratio "
+          f"{out['latency_ratio']:.1f}x (paper ~12x), error ratio "
+          f"{out['error_ratio']:.1f}x (paper ~7.8x), "
+          f"{out['n_on_hull']} on frontier / {out['n_above_hull']} above")
+    failed = [k for k, v in out["checks"].items() if not v]
+    print("claim checks:", "ALL PASS" if not failed else f"FAIL: {failed}")
+    return [("tradeoff_frontier", (time.time() - t0) * 1e6,
+             f"lat_ratio={out['latency_ratio']:.1f};"
+             f"checks_failed={len(failed)}")]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Pytest bootstrap: make ``repro`` (src/) and ``benchmarks`` importable
+regardless of how pytest is invoked.  Deliberately does NOT set XLA flags —
+smoke tests must see one CPU device (multi-device tests use subprocesses).
+"""
+
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (ROOT, os.path.join(ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

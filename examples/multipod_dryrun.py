@@ -1,0 +1,55 @@
+"""Drive the multi-pod dry-run for one cell and print its roofline terms.
+
+    PYTHONPATH=src python examples/multipod_dryrun.py \
+        --arch rwkv6-3b --shape long_500k
+
+This is the thin wrapper around repro.launch.dryrun (which must own the
+XLA_FLAGS device-count env var *before* jax is imported, hence the
+subprocess).
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-3b")
+    ap.add_argument("--shape", default="long_500k")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as tmp:
+        env = dict(os.environ, PYTHONPATH="src")
+        code = subprocess.call(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", args.arch, "--shape", args.shape,
+             "--mesh", args.mesh, "--out", tmp], env=env)
+        if code:
+            sys.exit(code)
+        for name in sorted(os.listdir(tmp)):
+            with open(os.path.join(tmp, name)) as f:
+                rec = json.load(f)
+            print(f"\n== {name}")
+            if rec["status"] != "ok":
+                print(f"  {rec['status']}: {rec.get('reason', '')}")
+                continue
+            print(f"  devices={rec['n_devices']} "
+                  f"compile={rec['compile_s']}s")
+            print(f"  flops/dev={rec['flops_per_device']:.3e} "
+                  f"bytes/dev={rec['bytes_per_device']:.3e}")
+            print(f"  collectives/dev="
+                  f"{rec['collective_bytes_per_device']['total']:.3e}B "
+                  f"{rec['collective_bytes_per_device']['counts']}")
+            mem = rec["memory"]
+            print(f"  memory: args={mem['argument_size'] / 1e9:.2f}GB "
+                  f"temp={mem['temp_size'] / 1e9:.2f}GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Train the paper's anytime LM with BOTH of §4.3's training modes and
+fault-tolerant supervision.
+
+  * joint: weighted per-level losses, one backward pass (nesting property);
+  * greedy: stage-wise — train level 1, freeze (stop_gradient on the
+    stripe prefix), train level 2, ...
+
+Also demonstrates the fault-tolerance substrate: the Supervisor
+checkpoints every N steps and we inject a crash mid-run; training resumes
+bit-exactly (determinism contract of the data pipeline).
+
+    PYTHONPATH=src python examples/train_anytime.py
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.data.synthetic import SyntheticLM
+from repro.models.registry import build_model
+from repro.optim.adamw import AdamW
+from repro.runtime.ft import Supervisor
+from repro.train.losses import token_accuracy
+from repro.train.step import (init_train_state, make_anytime_loss_fn,
+                              make_train_step)
+
+
+def main():
+    cfg = get_reduced("alert-anytime-120m").replace(dtype="float32",
+                                                    vocab=32)
+    model = build_model(cfg)
+    data = SyntheticLM(vocab=32, seq_len=64, global_batch=16, noise=0.05,
+                      order=2)
+    opt = AdamW(lr=8e-3)
+
+    def eval_levels(params):
+        b = {k: jnp.asarray(v) for k, v in data.batch_at(9_999).items()}
+        return [float(token_accuracy(
+            model.train_logits(params, b, level=k)[0], b["labels"]))
+            for k in range(1, cfg.nest_levels + 1)]
+
+    # --- joint training under the fault-tolerant supervisor ---------- #
+    print("[joint] training with crash injection at step 60...")
+    state = init_train_state(model, cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(
+        model, cfg, opt, loss_fn=make_anytime_loss_fn(model, cfg)))
+
+    def batch_at(i):
+        return {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+
+    with tempfile.TemporaryDirectory() as tmp:
+        sup = Supervisor(step, batch_at, tmp + "/ckpt", ckpt_every=25)
+        state, end = sup.run(state, 0, 120, fail_at=60)
+    print(f"[joint] finished at step {end} (1 crash, 1 restart); "
+          f"level accs: "
+          + " ".join(f"{a:.3f}" for a in eval_levels(state.params)))
+
+    # --- greedy stage-wise training ---------------------------------- #
+    print("[greedy] stage-wise training (train L1, freeze, L2, ...)")
+    state = init_train_state(model, cfg, opt, jax.random.PRNGKey(0))
+    for stage in range(1, cfg.nest_levels + 1):
+        sstep = jax.jit(make_train_step(
+            model, cfg, opt,
+            loss_fn=make_anytime_loss_fn(model, cfg, greedy_stage=stage)))
+        for i in range(40):
+            state, m = sstep(state, batch_at(1000 * stage + i))
+        print(f"  stage {stage}: loss {float(m['loss']):.3f}")
+    print(f"[greedy] level accs: "
+          + " ".join(f"{a:.3f}" for a in eval_levels(state.params)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""The paper's own model family: a width-nested Anytime LM (paper §4).
+
+This is the ALERT co-design config: a dense transformer with
+``nest_levels=4`` (power-of-2 level widths d/8, d/4, d/2, d) whose four
+levels form the controller's anytime candidate group.  Sized ~120M at full
+width so the end-to-end example can train it for a few hundred steps.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="alert-anytime-120m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=8,
+    n_kv_heads=8,
+    head_dim=96,
+    d_ff=3072,
+    vocab=32768,
+    nest_levels=4,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, d_model=64, n_heads=8, n_kv_heads=8,
+                          head_dim=8, d_ff=128, vocab=256, nest_levels=3,
+                          attn_chunk=32)

@@ -1,0 +1,31 @@
+"""gemma3-1b [dense] — 26L d_model=1152 4H (GQA kv=1) d_ff=6912
+vocab=262144.  5:1 local:global sliding-window pattern, 128k context
+[hf:google/gemma-3-1b-pt; unverified].
+
+Layers (i+1) % 6 == 0 are global; the rest use a 512-token sliding window,
+which keeps prefill/decode sub-quadratic-dominant — gemma3 therefore RUNS
+the ``long_500k`` cell (see DESIGN.md §Arch-applicability).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    n_layers=26,
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab=262144,
+    rope_theta=1e6,
+    sliding_window=512,
+    global_every=6,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(n_layers=7, d_model=64, n_heads=4, n_kv_heads=1,
+                          head_dim=16, d_ff=128, vocab=256,
+                          sliding_window=8, attn_chunk=32)

@@ -1,0 +1,31 @@
+"""qwen2-vl-2b [vlm] — 28L d_model=1536 12H (GQA kv=2) d_ff=8960
+vocab=151936.  M-RoPE, dynamic resolution [arXiv:2409.12191; hf].
+
+Vision frontend is a STUB per the assignment: ``input_specs`` provides
+M-RoPE 3-D position ids (text tokens get equal t/h/w streams); patch
+embeddings are precomputed upstream.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab=151936,
+    rope_theta=1e6,
+    qkv_bias=True,
+    m_rope=True,
+    mrope_sections=(16, 24, 24),
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                          head_dim=16, d_ff=128, vocab=256,
+                          mrope_sections=(2, 3, 3), attn_chunk=32)

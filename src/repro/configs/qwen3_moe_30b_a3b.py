@@ -1,0 +1,29 @@
+"""qwen3-moe-30b-a3b [moe] — 48L d_model=2048 32H (GQA kv=4) d_ff=768
+(per expert) vocab=151936, MoE 128e top-8 [hf:Qwen/Qwen3-30B-A3B; hf].
+
+Every layer is MoE (no dense FFN interleave); head_dim is 128 explicitly
+(32*128 = 4096 != d_model, as in the released config).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=768,
+    vocab=151936,
+    rope_theta=1e6,
+    n_experts=128,
+    top_k=8,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                          head_dim=16, d_ff=32, vocab=256, n_experts=8,
+                          top_k=2, attn_chunk=32)

@@ -1,0 +1,31 @@
+"""rwkv6-3b [ssm] — 32L d_model=2560 (attention-free) d_ff=8960
+vocab=65536.  Finch: data-dependent per-channel decay [arXiv:2404.05892; hf].
+
+O(1)-in-sequence decode state => runs the ``long_500k`` cell; this is the
+arch where the paper's anytime deadline staircase (Eq. 10) is most natural
+(constant-latency output steps).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    n_layers=32,
+    d_model=2560,
+    n_heads=40,            # informational: 2560 / rwkv_head_dim
+    n_kv_heads=40,
+    head_dim=64,
+    d_ff=8960,
+    vocab=65536,
+    rwkv=True,
+    rwkv_head_dim=64,
+    rwkv_decay_lora=64,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+                          head_dim=32, d_ff=128, vocab=256,
+                          rwkv_head_dim=32, rwkv_decay_lora=8,
+                          rwkv_chunk=16, attn_chunk=32)

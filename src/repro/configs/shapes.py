@@ -1,0 +1,104 @@
+"""The assigned input-shape sets and ``input_specs`` (ShapeDtypeStruct
+stand-ins, no device allocation — the dry-run pattern).
+
+LM shapes (applied to all 10 archs):
+    train_4k     seq_len=4096,   global_batch=256   (training)
+    prefill_32k  seq_len=32768,  global_batch=32    (inference-prefill)
+    decode_32k   seq_len=32768,  global_batch=128   (inference-decode)
+    long_500k    seq_len=524288, global_batch=1     (long-context-decode)
+
+``decode_*``/``long_*`` lower ``serve_step`` (one new token against a KV
+cache of seq_len), not ``train_step``.  ``long_500k`` requires
+sub-quadratic attention: SKIPPED for pure full-attention archs (see
+``cell_supported``), run for ssm/hybrid/local-window archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# Archs allowed to run long_500k: sub-quadratic sequence mixing.
+_LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(supported, reason-if-not).  The 40-cell grid minus documented skips."""
+    if shape.name == "long_500k":
+        if cfg.family in _LONG_OK_FAMILIES:
+            return True, ""
+        if cfg.sliding_window and cfg.global_every:
+            # gemma3: 5/6 of layers are windowed; decode cost is dominated
+            # by the local layers -> sub-quadratic-dominant, runs.
+            return True, ""
+        return False, ("long_500k skipped: pure full-attention arch "
+                       "(quadratic prefill / O(S) KV per token); see "
+                       "DESIGN.md 'Arch-applicability'")
+    return True, ""
+
+
+def _token_dtype() -> jnp.dtype:
+    return jnp.dtype(jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, *,
+                for_dryrun: bool = True) -> dict:
+    """ShapeDtypeStruct batch for (cfg, shape).
+
+    train:   {tokens, labels [B,S]} (+pos3d for vlm, +frames for encdec)
+    prefill: {tokens [B,S]} (+pos3d/frames)
+    decode:  {tokens [B,1], cache_len []} (+pos3d [3,B,1]); caches are built
+             separately via ``cache_specs``.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok = _token_dtype()
+    d = cfg.d_model
+    act = jnp.dtype(cfg.dtype)
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s), tok), "labels": sds((b, s), tok)}
+        if cfg.m_rope:
+            batch["pos3d"] = sds((3, b, s), tok)
+        if cfg.encoder_layers:
+            batch["frames"] = sds((b, s, d), act)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((b, s), tok)}
+        if cfg.m_rope:
+            batch["pos3d"] = sds((3, b, s), tok)
+        if cfg.encoder_layers:
+            batch["frames"] = sds((b, s, d), act)
+        return batch
+    # decode
+    batch = {"tokens": sds((b, 1), tok), "cache_len": sds((), tok)}
+    if cfg.m_rope:
+        batch["pos3d"] = sds((3, b, 1), tok)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, model) -> dict:
+    """ShapeDtypeStructs of the serve-time caches (KV buffers / SSM states)
+    sized to the shape's sequence length."""
+    return jax.eval_shape(
+        lambda: model.init_caches(shape.global_batch, shape.seq_len))

@@ -1,0 +1,26 @@
+"""stablelm-12b [dense] — 40L d_model=5120 32H (GQA kv=8) d_ff=13824
+vocab=100352  [hf:stabilityai/stablelm-2-1_6b family; hf].
+
+head_dim = 5120/32 = 160 — NOT a multiple of 128: the MXU pads the lane
+dim, recorded in the roofline notes.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-12b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=160,
+    d_ff=13824,
+    vocab=100352,
+    rope_theta=1e4,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                          head_dim=20, d_ff=96, vocab=256, attn_chunk=32)

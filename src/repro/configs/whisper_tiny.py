@@ -1,0 +1,26 @@
+"""whisper-tiny [audio] — 4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865.
+Encoder-decoder; conv frontend STUBBED (input_specs provides precomputed
+frame embeddings) [arXiv:2212.04356; unverified].
+
+``long_500k`` is SKIPPED (pure full attention, see DESIGN.md)."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="encdec",
+    n_layers=4,            # decoder layers
+    encoder_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab=51865,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, encoder_layers=2, d_model=64,
+                          n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128,
+                          vocab=256, attn_chunk=32)

@@ -1,0 +1,21 @@
+"""ALERT core: runtime controller (paper §3) + anytime nesting (paper §4)."""
+
+from repro.core.controller import (AlertController, Constraints, Decision,
+                                   Goal)
+from repro.core.kalman import IdlePowerFilter, ScalarKalman, SlowdownFilter
+from repro.core.nesting import (DepthSpec, StripeSpec, block_triangular_mask,
+                                depth_nested_apply, joint_anytime_loss,
+                                nested_linear, nested_norm_linear,
+                                prefix_rmsnorm)
+from repro.core.power import PowerModel, predict_energy
+from repro.core.profiles import (Candidate, ProfileTable,
+                                 profile_from_roofline, profile_measured)
+
+__all__ = [
+    "AlertController", "Constraints", "Decision", "Goal",
+    "IdlePowerFilter", "ScalarKalman", "SlowdownFilter",
+    "DepthSpec", "StripeSpec", "block_triangular_mask", "depth_nested_apply",
+    "joint_anytime_loss", "nested_linear", "nested_norm_linear",
+    "prefix_rmsnorm", "PowerModel", "predict_energy",
+    "Candidate", "ProfileTable", "profile_from_roofline", "profile_measured",
+]

@@ -1,0 +1,302 @@
+"""The ALERT runtime controller (paper Section 3).
+
+Per input n the controller runs the paper's four steps (Section 3.2.1):
+
+1. *Measurement* — the caller reports the previous input's latency / power.
+2. *Goal adjustment* — subtract the controller's own worst-case overhead from
+   T_goal; re-derive the per-input accuracy goal from the N-window average.
+3. *Feedback-based estimation* — update the slow-down filter xi (Eq. 6) and
+   the idle-power filter phi (Eq. 8); predict latency (Idea 1), accuracy
+   (Eq. 7 / staircase Eq. 10) and energy (Eq. 9) for every (model, power)
+   cell.
+4. *Pick a configuration* — Eq. 4 (minimize energy s.t. accuracy) or Eq. 5
+   (maximize accuracy s.t. energy).  If no cell satisfies every constraint,
+   constraints are relaxed in the paper's priority order: latency highest,
+   then accuracy, then power (Section 3.3).
+
+The scoring math is vectorised over the (K models x L power buckets) grid.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+
+import numpy as np
+
+from repro.core.kalman import IdlePowerFilter, SlowdownFilter
+from repro.core.profiles import ProfileTable
+
+_SQRT2 = math.sqrt(2.0)
+_erf = np.vectorize(math.erf, otypes=[float])
+
+
+def normal_cdf(x: np.ndarray) -> np.ndarray:
+    return 0.5 * (1.0 + _erf(np.asarray(x, dtype=float) / _SQRT2))
+
+
+class Goal(enum.Enum):
+    MINIMIZE_ENERGY = "minimize_energy"      # Eq. 2 / Eq. 4
+    MAXIMIZE_ACCURACY = "maximize_accuracy"  # Eq. 1 / Eq. 5
+
+
+@dataclasses.dataclass(frozen=True)
+class Constraints:
+    deadline: float                    # T_goal (seconds)
+    accuracy_goal: float | None = None  # Q_goal  (min-energy task)
+    energy_goal: float | None = None    # E_goal (J) (max-accuracy task)
+
+    @staticmethod
+    def from_power_budget(deadline: float, power_budget: float,
+                          accuracy_goal: float | None = None) -> "Constraints":
+        """Section 3.1: E_goal = P_goal * T_goal."""
+        return Constraints(deadline=deadline,
+                           accuracy_goal=accuracy_goal,
+                           energy_goal=power_budget * deadline)
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    model_index: int
+    power_index: int
+    model_name: str
+    power_cap: float
+    predicted_latency: float
+    predicted_accuracy: float
+    predicted_energy: float
+    feasible: bool          # did a cell satisfy every constraint?
+    relaxed: str            # "" | "power" | "accuracy" — what had to give
+
+
+@dataclasses.dataclass
+class _Estimates:
+    """All per-cell predictions for one selection round."""
+
+    lat_mean: np.ndarray    # [K, L]
+    lat_std: np.ndarray     # [K, L]
+    accuracy: np.ndarray    # [K, L]  expected accuracy under the deadline
+    energy: np.ndarray      # [K, L]  Eq. 9
+    p_finish: np.ndarray    # [K, L]  P(t <= T_goal)
+
+
+class WindowedAccuracyGoal:
+    """Paper fn.3: the accuracy goal is the average over any continuous N
+    inputs, so the per-input goal compensates for recently delivered
+    accuracy."""
+
+    def __init__(self, goal: float, window: int = 10):
+        self.goal = goal
+        self.window = window
+        self._recent: list[float] = []
+
+    def record(self, delivered: float) -> None:
+        self._recent.append(delivered)
+        if len(self._recent) > self.window - 1:
+            self._recent.pop(0)
+
+    def current_goal(self) -> float:
+        if not self._recent:
+            return self.goal
+        need = self.goal * self.window - sum(self._recent)
+        remaining = self.window - len(self._recent)
+        return need - (remaining - 1) * self.goal
+
+
+class AlertController:
+    """The ALERT decision loop over a :class:`ProfileTable`.
+
+    Parameters
+    ----------
+    table:
+        Candidate models x power buckets with profiled latency/power.
+    goal:
+        Which of the paper's two optimisation problems to solve.
+    kappa:
+        Deviation multiplier used when treating latency probabilistically is
+        not enough (e.g. ranking equally-accurate cells); the paper's
+        "three standard deviations = 99.7 %" knob.  The *accuracy* estimate
+        always integrates the full Normal distribution (Eq. 7), this knob
+        never replaces it.
+    overhead:
+        Controller's own worst-case per-input overhead (seconds), subtracted
+        from T_goal (Section 3.2.1 step 2).  Paper measures 0.6-1.7 % of
+        input processing time.
+    accuracy_window:
+        N for the windowed accuracy goal (paper fn.3).
+    paper_faithful_energy:
+        If True (default) use Eq. 9 verbatim (mean-latency energy).  If
+        False, use E[min(t, T)] under the Normal model — a strictly better
+        estimator we evaluate as a beyond-paper variant in benchmarks.
+    """
+
+    def __init__(self, table: ProfileTable, goal: Goal,
+                 kappa: float = 3.0, overhead: float = 0.0,
+                 accuracy_window: int = 10,
+                 paper_faithful_energy: bool = True):
+        self.table = table
+        self.goal = goal
+        self.kappa = kappa
+        self.overhead = overhead
+        self.paper_faithful_energy = paper_faithful_energy
+        self.slowdown = SlowdownFilter()
+        self.idle_power = IdlePowerFilter()
+        self._windowed_goal: WindowedAccuracyGoal | None = None
+        self.accuracy_window = accuracy_window
+        self._last_decision: Decision | None = None
+        # Precompute the anytime staircases: for candidate i (level m of a
+        # group) the train-latency of levels 1..m at each power bucket, and
+        # the level accuracies.
+        self._anytime_levels: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        for _, idxs in table.anytime_groups().items():
+            for pos, i in enumerate(idxs):
+                lvl_lat = table.latency[idxs[:pos + 1], :]      # [m, L]
+                lvl_acc = table.accuracies[idxs[:pos + 1]]       # [m]
+                self._anytime_levels[i] = (lvl_lat, lvl_acc)
+
+    # ------------------------------------------------------------------ #
+    # Step 1+3: measurement feedback                                      #
+    # ------------------------------------------------------------------ #
+    def observe(self, observed_latency: float,
+                deadline_missed: bool = False,
+                idle_power: float | None = None,
+                delivered_accuracy: float | None = None,
+                profiled_override: float | None = None) -> None:
+        """Feed the previous input's measurements.
+
+        ``profiled_override`` supports the anytime co-design: when the
+        deepest level missed the deadline but level k completed, the level-k
+        completion time is an UNCENSORED latency observation — pass it with
+        level k's profiled latency.  (A traditional DNN only yields the
+        censored "it was still running at T" observation, which the paper
+        handles with the 0.2 inflation.)
+        """
+        if self._last_decision is None:
+            return
+        d = self._last_decision
+        profiled = profiled_override if profiled_override is not None \
+            else self.table.latency[d.model_index, d.power_index]
+        self.slowdown.observe(observed_latency, profiled,
+                              deadline_missed=deadline_missed)
+        if idle_power is not None:
+            active = self.table.run_power[d.model_index, d.power_index]
+            self.idle_power.observe(idle_power, active)
+        if delivered_accuracy is not None and self._windowed_goal is not None:
+            self._windowed_goal.record(delivered_accuracy)
+
+    # ------------------------------------------------------------------ #
+    # Step 3: per-cell estimation                                         #
+    # ------------------------------------------------------------------ #
+    def estimate(self, deadline: float) -> _Estimates:
+        t_train = self.table.latency                      # [K, L]
+        mu, sd = self.slowdown.mu, self.slowdown.std
+        lat_mean = mu * t_train
+        lat_std = np.maximum(sd * t_train, 1e-12)
+        z = (deadline - lat_mean) / lat_std
+        p_finish = normal_cdf(z)
+
+        q = self.table.accuracies[:, None]                # [K, 1]
+        q_fail = self.table.q_fail
+        # Eq. 7 (traditional): expectation of the Eq. 3 step function.
+        accuracy = q_fail + (q - q_fail) * p_finish
+        # Eq. 10 (anytime staircase) overrides anytime candidates.
+        for i, (lvl_lat, lvl_acc) in self._anytime_levels.items():
+            lvl_mean = mu * lvl_lat                       # [m, L]
+            lvl_std = np.maximum(sd * lvl_lat, 1e-12)
+            f = normal_cdf((deadline - lvl_mean) / lvl_std)   # [m, L] P(t_k<=T)
+            f_next = np.vstack([f[1:], np.zeros((1, f.shape[1]))])
+            accuracy[i] = q_fail * (1.0 - f[0]) + (lvl_acc[:, None] *
+                                                   (f - f_next)).sum(axis=0)
+            p_finish[i] = f[-1]
+
+        # Energy, Eq. 9.  Run-phase time is capped at the deadline (a missed
+        # input is abandoned at T_goal, Section 3.3).
+        phi = self.idle_power.phi
+        caps = self.table.run_power                       # [K, L] actual draw
+        if self.paper_faithful_energy:
+            t_run = np.minimum(lat_mean, deadline)
+        else:
+            # Beyond-paper: E[min(t, T)] for t ~ N(lat_mean, lat_std^2).
+            pdf = np.exp(-0.5 * z ** 2) / math.sqrt(2 * math.pi)
+            t_run = lat_mean * p_finish + deadline * (1 - p_finish) \
+                - lat_std * pdf
+            t_run = np.clip(t_run, 0.0, deadline)
+        energy = caps * t_run + phi * caps * np.maximum(deadline - t_run, 0.0)
+        return _Estimates(lat_mean, lat_std, accuracy, energy, p_finish)
+
+    # ------------------------------------------------------------------ #
+    # Step 2+4: goal adjustment and selection                             #
+    # ------------------------------------------------------------------ #
+    def select(self, constraints: Constraints) -> Decision:
+        deadline = max(constraints.deadline - self.overhead, 1e-9)
+        est = self.estimate(deadline)
+
+        q_goal = constraints.accuracy_goal
+        if q_goal is not None:
+            if self._windowed_goal is None or \
+                    self._windowed_goal.goal != q_goal:
+                self._windowed_goal = WindowedAccuracyGoal(
+                    q_goal, self.accuracy_window)
+            q_goal_eff = self._windowed_goal.current_goal()
+        else:
+            q_goal_eff = None
+
+        if self.goal is Goal.MINIMIZE_ENERGY:
+            decision = self._select_min_energy(est, q_goal_eff)
+        else:
+            decision = self._select_max_accuracy(est, constraints.energy_goal)
+        self._last_decision = decision
+        return decision
+
+    def _mk(self, est: _Estimates, i: int, j: int, feasible: bool,
+            relaxed: str) -> Decision:
+        return Decision(
+            model_index=i, power_index=j,
+            model_name=self.table.candidates[i].name,
+            power_cap=float(self.table.power_caps[j]),
+            predicted_latency=float(est.lat_mean[i, j]),
+            predicted_accuracy=float(est.accuracy[i, j]),
+            predicted_energy=float(est.energy[i, j]),
+            feasible=feasible, relaxed=relaxed)
+
+    def _select_min_energy(self, est: _Estimates,
+                           q_goal: float | None) -> Decision:
+        """Eq. 4: argmin e  s.t.  q_hat[T_goal] >= Q_goal.
+
+        The latency constraint is already folded into q_hat — a cell whose
+        deadline-miss probability is too high cannot reach Q_goal because a
+        miss delivers q_fail (Eq. 3).
+        """
+        assert q_goal is not None, "minimize-energy task needs accuracy_goal"
+        feasible = est.accuracy >= q_goal
+        if feasible.any():
+            energy = np.where(feasible, est.energy, np.inf)
+            i, j = np.unravel_index(int(np.argmin(energy)), energy.shape)
+            return self._mk(est, i, j, True, "")
+        # Relaxation (Section 3.3): latency > accuracy > power.  Energy is
+        # the objective here so "power" has nothing to give; sacrifice the
+        # accuracy *goal* but stay latency-aware by maximising expected
+        # accuracy (which embeds the deadline).
+        i, j = np.unravel_index(int(np.argmax(est.accuracy)),
+                                est.accuracy.shape)
+        return self._mk(est, i, j, False, "accuracy")
+
+    def _select_max_accuracy(self, est: _Estimates,
+                             e_goal: float | None) -> Decision:
+        """Eq. 5: argmax q_hat[T_goal]  s.t.  predicted energy <= E_goal."""
+        assert e_goal is not None, "maximize-accuracy task needs energy_goal"
+        feasible = est.energy <= e_goal
+        if feasible.any():
+            acc = np.where(feasible, est.accuracy, -np.inf)
+            best = acc.max()
+            # Tie-break equal-accuracy cells by lower energy.
+            tie = np.where(np.isclose(acc, best, rtol=0, atol=1e-12),
+                           est.energy, np.inf)
+            i, j = np.unravel_index(int(np.argmin(tie)), tie.shape)
+            return self._mk(est, i, j, True, "")
+        # Power/energy is the lowest-priority constraint — drop it first.
+        best = est.accuracy.max()
+        tie = np.where(np.isclose(est.accuracy, best, rtol=0, atol=1e-12),
+                       est.energy, np.inf)
+        i, j = np.unravel_index(int(np.argmin(tie)), tie.shape)
+        return self._mk(est, i, j, False, "power")

@@ -1,0 +1,367 @@
+"""Anytime-DNN nesting (paper Section 4) as composable JAX building blocks.
+
+Width nesting
+-------------
+A layer of total width ``D`` is partitioned into ``K`` stripes with
+power-of-2 *level* widths ``d_k = D * 2^(k-1) / 2^(K-1)`` (paper §4.2.1:
+"if the first nested network d1 contains w neurons in one layer, d_x
+contains w*2^(x-1) neurons in the corresponding layer").  Connectivity
+between striped dims is **block-lower-triangular**: output stripe ``i``
+reads input stripes ``j <= i`` (edges from later to earlier stripes are
+dropped; Figure 7).
+
+Because the dropped edges are exactly the ones that would let early stripes
+see late stripes, the level-k forward pass of the *full* network equals the
+forward pass of the standalone k-level subnetwork, and all K level outputs
+fall out of ONE forward pass — this is what makes joint training one
+backward pass, and what the ``nested_matmul`` Pallas kernel tiles on the MXU.
+
+Pre-norm nesting ("prefix RMSNorm")
+-----------------------------------
+RMSNorm over the full width would let stripe 1 see stripe 4 through the
+normalisation statistics, breaking nesting.  But RMSNorm is a per-token
+*scalar* multiply, so the level-i statistics can be divided into the
+*output* stripes of the following linear:
+
+    u_i = ( sum_{j<=i} (gamma (.) h)_j @ W_ji ) / rms(h[:d_i])
+
+Every *consumer* stripe i sees its inputs normalised exactly as the
+standalone level-i network's RMSNorm would normalise them — so level-k
+truncated execution is bit-identical to the level-k prefix of the full run
+(the nesting property), with zero approximation.  See
+:func:`prefix_rms_scales`.
+
+Depth nesting
+-------------
+Interlaced layer subsets (paper §4.2.2): level k of K uses layers
+``{j : j % 2^(K-k) == 2^(K-k)-1}`` (0-based), i.e. each deeper level doubles
+the layer count, and the last layer is always included.  Skip connections
+jump power-of-2 distances, pruned so a layer never reads a layer of a
+*deeper* level (Figure 8's gray edges) — hence earlier-level activations are
+bit-identical inside deeper levels and anytime execution just fills in the
+new layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------- #
+# Stripe geometry                                                        #
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class StripeSpec:
+    """Partition of one tensor dimension into nesting stripes.
+
+    ``boundaries`` has K+1 entries, ``boundaries[k]`` = width of level k
+    (cumulative).  ``boundaries[0] == 0`` and ``boundaries[K] == D``.
+    """
+
+    boundaries: tuple[int, ...]
+
+    @staticmethod
+    def pow2(total: int, levels: int) -> "StripeSpec":
+        """Power-of-2 level widths per the paper."""
+        if levels < 1:
+            raise ValueError("levels must be >= 1")
+        denom = 2 ** (levels - 1)
+        if total % denom != 0:
+            raise ValueError(f"total={total} not divisible by 2^(K-1)={denom}")
+        bounds = [0] + [total * (2 ** (k - 1)) // denom
+                        for k in range(1, levels + 1)]
+        return StripeSpec(tuple(bounds))
+
+    @staticmethod
+    def uniform(total: int, levels: int) -> "StripeSpec":
+        if total % levels != 0:
+            raise ValueError(f"total={total} not divisible by levels={levels}")
+        step = total // levels
+        return StripeSpec(tuple(step * k for k in range(levels + 1)))
+
+    @staticmethod
+    def single(total: int) -> "StripeSpec":
+        """Degenerate one-stripe spec (dimension not nested, e.g. vocab)."""
+        return StripeSpec((0, total))
+
+    @staticmethod
+    def saturated(total: int, levels: int) -> "StripeSpec":
+        """All width in stripe 1, later stripes empty — used for dims that
+        cannot be divided (e.g. a single GQA KV head): the dim is available
+        from level 1 on, and per nesting rules may only *read* stripe-1
+        inputs."""
+        return StripeSpec((0,) + (total,) * levels)
+
+    @property
+    def levels(self) -> int:
+        return len(self.boundaries) - 1
+
+    @property
+    def total(self) -> int:
+        return self.boundaries[-1]
+
+    def width(self, level: int) -> int:
+        """Cumulative width of ``level`` (1-based)."""
+        return self.boundaries[level]
+
+    def stripe_slice(self, k: int) -> slice:
+        """Slice of stripe k (1-based): channels added at level k."""
+        return slice(self.boundaries[k - 1], self.boundaries[k])
+
+    def stripe_sizes(self) -> list[int]:
+        return [self.boundaries[k] - self.boundaries[k - 1]
+                for k in range(1, self.levels + 1)]
+
+    def level_of_channel(self) -> np.ndarray:
+        """[total] int array: nesting level (1-based) of each channel."""
+        out = np.zeros(self.total, dtype=np.int32)
+        for k in range(1, self.levels + 1):
+            out[self.boundaries[k - 1]:self.boundaries[k]] = k
+        return out
+
+
+def block_triangular_mask(in_spec: StripeSpec,
+                          out_spec: StripeSpec) -> np.ndarray:
+    """[d_in, d_out] 0/1 mask keeping connections with in-level <= out-level."""
+    li = in_spec.level_of_channel()[:, None]
+    lo = out_spec.level_of_channel()[None, :]
+    return (li <= lo).astype(np.float32)
+
+
+# --------------------------------------------------------------------- #
+# Nested linear                                                          #
+# --------------------------------------------------------------------- #
+def nested_linear_masked(x: jax.Array, w: jax.Array, in_spec: StripeSpec,
+                         out_spec: StripeSpec) -> jax.Array:
+    """Reference semantics: dense matmul with the dropped blocks zeroed.
+
+    Burns the full dense FLOPs — used as an oracle and for gradient checks.
+    """
+    mask = jnp.asarray(block_triangular_mask(in_spec, out_spec),
+                       dtype=w.dtype)
+    return x @ (w * mask)
+
+
+def nested_linear_blocks(x: jax.Array, w: jax.Array, in_spec: StripeSpec,
+                         out_spec: StripeSpec,
+                         level: int | None = None) -> jax.Array:
+    """Block-triangular matmul looping only the live ``j <= i`` blocks.
+
+    HLO FLOPs reflect the triangular saving (~(K+1)/2K of dense for equal
+    stripes; less for power-of-2 stripes).  ``level`` truncates the output
+    (and the blocks computed) to the given nesting level — the compiled
+    level-k program touches *only* level-k weights.
+    """
+    k_out = out_spec.levels if level is None else level
+    # Level-k execution may pass a level-k prefix of the input (the whole
+    # pipeline runs truncated); we only ever read the needed prefix.
+    needed = in_spec.width(min(k_out, in_spec.levels))
+    if x.shape[-1] < needed:
+        raise ValueError(f"x last dim {x.shape[-1]} < required prefix "
+                         f"{needed} (level {k_out})")
+    outs = []
+    for i in range(1, k_out + 1):
+        o_sl = out_spec.stripe_slice(i)
+        if o_sl.stop == o_sl.start:
+            continue
+        # Input levels j <= i, contiguous prefix [0, in_spec.width(min(i, Ki))).
+        j = min(i, in_spec.levels)
+        w_in = in_spec.width(j)
+        acc = x[..., :w_in] @ w[:w_in, o_sl]
+        outs.append(acc)
+    return jnp.concatenate(outs, axis=-1)
+
+
+def nested_linear(x: jax.Array, w: jax.Array, in_spec: StripeSpec,
+                  out_spec: StripeSpec, level: int | None = None,
+                  backend: str = "blocks") -> jax.Array:
+    if backend == "blocks":
+        return nested_linear_blocks(x, w, in_spec, out_spec, level)
+    if backend == "masked":
+        y = nested_linear_masked(x, w, in_spec, out_spec)
+        if level is not None:
+            y = y[..., :out_spec.width(level)]
+        return y
+    if backend == "kernel":
+        from repro.kernels import ops  # lazy: pallas import
+        return ops.nested_matmul(x, w, in_spec, out_spec, level=level)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+# --------------------------------------------------------------------- #
+# Prefix RMSNorm                                                         #
+# --------------------------------------------------------------------- #
+def prefix_rms_scales(h: jax.Array, spec: StripeSpec,
+                      eps: float = 1e-6,
+                      level: int | None = None) -> jax.Array:
+    """Per-level inverse RMS over the level's channel prefix.
+
+    Returns ``r`` with shape ``h.shape[:-1] + (k,)`` where ``r[..., i-1]`` is
+    ``1 / rms(h[..., :d_i])`` — the scalar a standalone level-i network's
+    RMSNorm would apply.
+    """
+    k = spec.levels if level is None else level
+    sq = jnp.square(h.astype(jnp.float32))
+    csum = jnp.cumsum(sq, axis=-1)
+    idx = np.asarray([spec.width(i) - 1 for i in range(1, k + 1)])
+    prefix_sums = csum[..., idx]                       # [..., k]
+    widths = jnp.asarray([spec.width(i) for i in range(1, k + 1)],
+                         dtype=jnp.float32)
+    return jax.lax.rsqrt(prefix_sums / widths + eps).astype(h.dtype)
+
+
+def scale_out_stripes(y: jax.Array, scales: jax.Array,
+                      out_spec: StripeSpec,
+                      level: int | None = None) -> jax.Array:
+    """Multiply output stripe i by ``scales[..., i-1]`` (prefix-norm divide)."""
+    k = out_spec.levels if level is None else level
+    reps = np.asarray(out_spec.stripe_sizes()[:k])
+    gather = np.repeat(np.arange(k), reps)             # [width(k)]
+    return y * scales[..., gather]
+
+
+def nested_norm_linear(h: jax.Array, gamma: jax.Array, w: jax.Array,
+                       in_spec: StripeSpec, out_spec: StripeSpec,
+                       level: int | None = None, eps: float = 1e-6,
+                       backend: str = "blocks") -> jax.Array:
+    """Fused prefix-RMSNorm + nested linear:  u_i = ((gamma.h) W)_i / rms_i."""
+    scales = prefix_rms_scales(h, in_spec, eps=eps, level=level)
+    # h may be a level-k prefix of the full width (truncated pipeline).
+    y = nested_linear(h * gamma[:h.shape[-1]], w, in_spec, out_spec,
+                      level=level, backend=backend)
+    # Output stripe i corresponds to *input prefix* level min(i, K_in).
+    k = out_spec.levels if level is None else level
+    lvl_map = [min(i, in_spec.levels) - 1 for i in range(1, k + 1)]
+    scales = scales[..., np.asarray(lvl_map)]
+    return scale_out_stripes(y, scales, out_spec, level=level)
+
+
+def prefix_rmsnorm(h: jax.Array, gamma: jax.Array, spec: StripeSpec,
+                   level: int, eps: float = 1e-6) -> jax.Array:
+    """Standalone prefix RMSNorm at one level (used before the unembed)."""
+    d = spec.width(level)
+    hk = h[..., :d]
+    var = jnp.mean(jnp.square(hk.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (hk * jax.lax.rsqrt(var + eps).astype(h.dtype)) * gamma[:d]
+
+
+# --------------------------------------------------------------------- #
+# Per-level parameter slicing (the "standalone subnetwork" view)          #
+# --------------------------------------------------------------------- #
+def slice_linear_to_level(w: jax.Array, in_spec: StripeSpec,
+                          out_spec: StripeSpec, level: int) -> jax.Array:
+    """Weights of the standalone level-k subnetwork: the triangular prefix."""
+    return w[:in_spec.width(min(level, in_spec.levels)),
+             :out_spec.width(level)]
+
+
+def freeze_prefix(w: jax.Array, in_spec: StripeSpec, out_spec: StripeSpec,
+                  level: int) -> jax.Array:
+    """Greedy training (paper §4.3): stop-gradient every block fully inside
+    levels < ``level`` so stage-k training leaves earlier stripes frozen."""
+    if level <= 1:
+        return w
+    di = in_spec.width(min(level - 1, in_spec.levels))
+    do = out_spec.width(level - 1)
+    frozen = jax.lax.stop_gradient(w[:di, :do])
+    top = jnp.concatenate([frozen, w[:di, do:]], axis=1)
+    return jnp.concatenate([top, w[di:, :]], axis=0)
+
+
+# --------------------------------------------------------------------- #
+# Joint / greedy anytime losses (paper §4.3 "Training")                  #
+# --------------------------------------------------------------------- #
+def joint_anytime_loss(per_level_losses: Sequence[jax.Array],
+                       weights: Sequence[float] | None = None) -> jax.Array:
+    """Weighted sum of per-level losses; one backward pass trains all levels.
+
+    Default weighting is uniform; the paper notes per-output importance is a
+    free knob to match known operating environments.
+    """
+    k = len(per_level_losses)
+    if weights is None:
+        weights = [1.0 / k] * k
+    if len(weights) != k:
+        raise ValueError("len(weights) != number of levels")
+    total = sum(w * l for w, l in zip(weights, per_level_losses))
+    return jnp.asarray(total)
+
+
+def greedy_stage_weights(stage: int, levels: int) -> list[float]:
+    """One-hot level weighting for greedy stage-wise training."""
+    return [1.0 if (k == stage - 1) else 0.0 for k in range(levels)]
+
+
+# --------------------------------------------------------------------- #
+# Depth nesting                                                          #
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class DepthSpec:
+    """Interlaced depth-nesting plan over ``n_layers`` with ``K`` levels."""
+
+    n_layers: int
+    levels: int
+
+    def level_of_layer(self, j: int) -> int:
+        """Nesting level (1-based) of 0-based layer j: smallest k such that
+        j lands on the level-k interlacing grid ``j % 2^(K-k) == 0``.
+
+        Paper Fig. 8: the shallow network d1 is the ODD layers (1st, 3rd,
+        ... 1-based) = stride-2^{K-1} starting at 0; each deeper level
+        fills in the midpoints.  Deeper layers may read shallower ones
+        (never the reverse), so the last layer of each *cumulative* level
+        set is that level's output and everything stays connected.
+        """
+        for k in range(1, self.levels + 1):
+            s = 2 ** (self.levels - k)
+            if j % s == 0:
+                return k
+        return self.levels
+
+    def layers_of_level(self, level: int) -> list[int]:
+        """All layers RUN at ``level`` (cumulative: levels <= level)."""
+        s = 2 ** (self.levels - level)
+        return [j for j in range(self.n_layers) if j % s == 0]
+
+    def skip_sources(self, j: int) -> list[int]:
+        """Power-of-2 predecessors of layer j readable under nesting:
+        sources at distance 2^m whose level is <= level(j).  Source -1 is
+        the embedding/input."""
+        lj = self.level_of_layer(j)
+        srcs = []
+        d = 1
+        while j - d >= -1:
+            src = j - d
+            if src == -1 or self.level_of_layer(src) <= lj:
+                srcs.append(src)
+            d *= 2
+        return srcs
+
+
+def depth_nested_apply(layer_fns: Sequence[Callable[[jax.Array], jax.Array]],
+                       x: jax.Array, spec: DepthSpec,
+                       level: int | None = None) -> list[jax.Array]:
+    """Run a depth-nested stack; returns the stream state after the last
+    layer of each level up to ``level`` (one output per level, paper Eq. 10).
+
+    ``layer_fns[j]`` maps the aggregated skip input to the layer's output.
+    Activations of level <= k layers are identical whether or not deeper
+    levels run — asserted by tests — so anytime execution can stop after any
+    level boundary.
+    """
+    k = spec.levels if level is None else level
+    buf: dict[int, jax.Array] = {-1: x}
+    level_layers = {lv: spec.layers_of_level(lv) for lv in range(1, k + 1)}
+    run = sorted({j for lv in range(1, k + 1) for j in level_layers[lv]})
+    for j in run:
+        srcs = [s for s in spec.skip_sources(j) if s in buf]
+        agg = buf[srcs[0]]
+        for s in srcs[1:]:
+            agg = agg + buf[s]
+        buf[j] = layer_fns[j](agg)
+    return [buf[level_layers[lv][-1]] for lv in range(1, k + 1)]

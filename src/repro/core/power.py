@@ -1,0 +1,83 @@
+"""Power/energy models for ALERT on TPU-class hardware.
+
+The paper actuates power through Intel RAPL caps.  TPUs in this container
+expose no power interface, so — per DESIGN.md §2 — we model the actuator:
+a classic DVFS model where dynamic power grows cubically with clock
+frequency and achievable compute throughput scales linearly with clock.
+
+    p(f) = p_idle + (p_tdp - p_idle) * f^3        f in (0, 1]  (fraction of peak clock)
+    speed(p) = f = ((p - p_idle) / (p_tdp - p_idle)) ** (1/3)
+
+For memory-/collective-bound phases throughput scales sub-linearly with
+clock; the roofline-aware latency model in ``profiles.py`` interpolates
+between compute-bound (∝1/f) and bandwidth-bound (clock-invariant) using the
+workload's arithmetic intensity.
+
+Everything the controller sees is a discrete set of *power buckets*
+(Section 3.3 of the paper: 2.5 W steps on the laptop, 5 W on the server; the
+number of buckets is configurable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# TPU v5e-class constants (per chip), matching the roofline constants used in
+# EXPERIMENTS.md: 197 TFLOP/s bf16, 819 GB/s HBM.
+V5E_PEAK_FLOPS = 197e12
+V5E_HBM_BW = 819e9
+V5E_ICI_BW = 50e9  # per link
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerModel:
+    """Cubic-DVFS power model for one chip (or one laptop socket — the
+    constants are configurable so the paper's Razer/Skylake setups can be
+    modelled with the same class)."""
+
+    p_idle: float = 60.0     # W, chip + host share at idle
+    p_tdp: float = 200.0     # W, at full clock
+    min_fraction: float = 0.3  # lowest supported clock fraction
+
+    def speed_fraction(self, power_cap: float) -> float:
+        """Fraction of peak *compute* throughput achievable under ``power_cap``."""
+        if power_cap >= self.p_tdp:
+            return 1.0
+        usable = max(power_cap - self.p_idle, 0.0)
+        f = (usable / (self.p_tdp - self.p_idle)) ** (1.0 / 3.0)
+        return float(np.clip(f, self.min_fraction, 1.0))
+
+    def power_at_fraction(self, f: float) -> float:
+        f = float(np.clip(f, self.min_fraction, 1.0))
+        return self.p_idle + (self.p_tdp - self.p_idle) * f ** 3
+
+    def buckets(self, n: int = 8) -> np.ndarray:
+        """Discrete power-cap buckets spanning the feasible range
+        (Section 3.3: ALERT uses a configurable number of discrete caps)."""
+        lo = self.power_at_fraction(self.min_fraction)
+        return np.linspace(lo, self.p_tdp, n)
+
+
+def predict_energy(power_cap: float, latency: float, idle_ratio: float,
+                   period: float) -> float:
+    """ALERT Eq. 9 — energy of one input handled under ``power_cap``:
+
+        e = p * t_run  +  phi * p * (T_goal - t_run)
+
+    ``idle_ratio`` is phi from the IdlePowerFilter; ``period`` is the time
+    window one input owns (the deadline T_goal).  The second term is the
+    DNN-idle energy: the system still draws phi*p while waiting for the next
+    input.  Slack is clamped at zero — if the inference overruns the period
+    there is no idle interval.
+    """
+    slack = max(period - latency, 0.0)
+    return power_cap * latency + idle_ratio * power_cap * slack
+
+
+def batched_predict_energy(power_caps: np.ndarray, latencies: np.ndarray,
+                           idle_ratio: float, period: float) -> np.ndarray:
+    """Vectorised Eq. 9 over a (n_models, n_powers) grid."""
+    slack = np.maximum(period - latencies, 0.0)
+    return power_caps * latencies + idle_ratio * power_caps * slack

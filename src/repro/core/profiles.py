@@ -1,0 +1,158 @@
+"""Profile tables for the ALERT controller.
+
+ALERT's controller consumes, per candidate configuration (d_i, p_j):
+
+    t_train[i, j]  — profiled mean latency (seconds)
+    q[i]           — accuracy of model d_i (training accuracy; Section 3 fn.2)
+    p_run[i, j]    — active power draw under cap p_j
+
+plus ``q_fail`` (random-guess accuracy) and, for anytime families, the
+monotone per-level accuracy staircase (Eq. 10).
+
+Two ways to build a table:
+
+* :func:`profile_from_roofline` — analytic: each candidate is described by its
+  FLOPs and HBM bytes per inference; latency under a power cap interpolates
+  compute-bound (scales with 1/clock) and memory-bound (clock-invariant)
+  roofline terms.  This is how the production-scale benchmarks (Table-4 grid)
+  get realistic, internally consistent latency/energy tables without TPU
+  wall clocks.
+
+* :func:`profile_measured` — empirical: run a list of jit'd callables on this
+  host and record mean latency.  Used by the real tiny-model end-to-end
+  example (examples/serve_alert.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.power import PowerModel
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One member d_i of the model family the controller selects from."""
+
+    name: str
+    flops: float               # per-inference FLOPs
+    bytes_hbm: float           # per-inference HBM traffic
+    accuracy: float            # q_i  (higher is better)
+    is_anytime_level: bool = False
+    anytime_group: str | None = None  # levels of one anytime net share a group
+    level: int = 0             # nesting level within the group (1-based)
+
+
+@dataclasses.dataclass
+class ProfileTable:
+    """The (models × power buckets) profile the controller operates on."""
+
+    candidates: list[Candidate]
+    power_caps: np.ndarray          # [L]
+    latency: np.ndarray             # [K, L] seconds, profiled-environment mean
+    run_power: np.ndarray           # [K, L] W, active power under each cap
+    q_fail: float = 0.0
+
+    def __post_init__(self) -> None:
+        k, l = self.latency.shape
+        assert len(self.candidates) == k
+        assert self.power_caps.shape == (l,)
+        assert self.run_power.shape == (k, l)
+        assert np.all(self.latency > 0)
+
+    @property
+    def accuracies(self) -> np.ndarray:
+        return np.array([c.accuracy for c in self.candidates])
+
+    @property
+    def names(self) -> list[str]:
+        return [c.name for c in self.candidates]
+
+    def anytime_groups(self) -> dict[str, list[int]]:
+        """Indices of candidates per anytime group, sorted by level."""
+        groups: dict[str, list[int]] = {}
+        for idx, c in enumerate(self.candidates):
+            if c.is_anytime_level and c.anytime_group is not None:
+                groups.setdefault(c.anytime_group, []).append(idx)
+        for g in groups.values():
+            g.sort(key=lambda i: self.candidates[i].level)
+        return groups
+
+    def subset(self, indices: Sequence[int]) -> "ProfileTable":
+        idx = list(indices)
+        return ProfileTable(
+            candidates=[self.candidates[i] for i in idx],
+            power_caps=self.power_caps,
+            latency=self.latency[idx],
+            run_power=self.run_power[idx],
+            q_fail=self.q_fail,
+        )
+
+
+def roofline_latency(flops: float, bytes_hbm: float, speed_fraction: float,
+                     peak_flops: float, hbm_bw: float) -> float:
+    """Latency under a clock fraction ``f``: compute term scales 1/f, memory
+    term is clock-invariant.  max() of the two terms (classic roofline)."""
+    compute = flops / (peak_flops * speed_fraction)
+    memory = bytes_hbm / hbm_bw
+    return max(compute, memory)
+
+
+def profile_from_roofline(candidates: Sequence[Candidate],
+                          power_model: PowerModel,
+                          n_power_buckets: int = 8,
+                          peak_flops: float = 197e12,
+                          hbm_bw: float = 819e9,
+                          q_fail: float = 0.0,
+                          overhead: float = 0.0) -> ProfileTable:
+    """Build a ProfileTable analytically from roofline terms."""
+    caps = power_model.buckets(n_power_buckets)
+    lat = np.zeros((len(candidates), len(caps)))
+    pw = np.zeros_like(lat)
+    for i, cand in enumerate(candidates):
+        for j, cap in enumerate(caps):
+            f = power_model.speed_fraction(cap)
+            lat[i, j] = roofline_latency(cand.flops, cand.bytes_hbm, f,
+                                         peak_flops, hbm_bw) + overhead
+            # Actual draw is the cap's operating point, not the cap itself,
+            # when the cap exceeds what the clock needs.
+            pw[i, j] = power_model.power_at_fraction(f)
+    return ProfileTable(list(candidates), caps, lat, pw, q_fail=q_fail)
+
+
+def profile_measured(fns: Sequence[Callable[[], None]],
+                     names: Sequence[str],
+                     accuracies: Sequence[float],
+                     power_model: PowerModel,
+                     n_power_buckets: int = 4,
+                     warmup: int = 2,
+                     iters: int = 5,
+                     q_fail: float = 0.0) -> ProfileTable:
+    """Measure mean wall-clock latency of real callables on this host.
+
+    Power scaling cannot be actuated on this host, so the measured latency at
+    full clock is extrapolated to the other buckets with the compute-bound
+    1/f rule — conservative for memory-bound models (they would be faster).
+    """
+    caps = power_model.buckets(n_power_buckets)
+    base = np.zeros(len(fns))
+    for i, fn in enumerate(fns):
+        for _ in range(warmup):
+            fn()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        base[i] = (time.perf_counter() - t0) / iters
+    lat = np.zeros((len(fns), len(caps)))
+    pw = np.zeros_like(lat)
+    for j, cap in enumerate(caps):
+        f = power_model.speed_fraction(cap)
+        lat[:, j] = base / f
+        pw[:, j] = power_model.power_at_fraction(f)
+    cands = [Candidate(name=n, flops=0.0, bytes_hbm=0.0, accuracy=a)
+             for n, a in zip(names, accuracies)]
+    return ProfileTable(cands, caps, lat, pw, q_fail=q_fail)

@@ -1,0 +1,62 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+``backend`` resolution: this container is CPU-only, so the default backend
+is ``interpret`` (the kernel body executes in Python via the Pallas
+interpreter — bit-faithful to the TPU grid/BlockSpec semantics); on a real
+TPU the same calls compile to Mosaic.  ``ref`` falls back to the pure-jnp
+oracle (what the dry-run lowers).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.core.nesting import StripeSpec
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import nested_matmul as _nm
+from repro.kernels import ref
+from repro.kernels import rwkv_scan as _rw
+
+
+def _use_interpret() -> bool:
+    if os.environ.get("REPRO_KERNEL_BACKEND") == "ref":
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def nested_matmul(x: jax.Array, w: jax.Array, in_spec: StripeSpec,
+                  out_spec: StripeSpec, level: int | None = None,
+                  backend: str | None = None, **kw) -> jax.Array:
+    if backend == "ref":
+        return ref.nested_matmul_ref(x, w, in_spec, out_spec, level)
+    return _nm.nested_matmul(x, w, in_spec, out_spec, level,
+                             interpret=_use_interpret(), **kw)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    backend: str | None = None, **kw):
+    if backend == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal,
+                                       window=window, softcap=softcap)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap,
+                               interpret=_use_interpret(), **kw)
+
+
+def decode_attention(q, k, v, cache_len, *, window=None,
+                     backend: str | None = None, **kw):
+    if backend == "ref":
+        return ref.decode_attention_ref(q, k, v, cache_len, window=window)
+    return _dec.decode_attention(q, k, v, cache_len, window=window,
+                                 interpret=_use_interpret(), **kw)
+
+
+def rwkv_scan(r, k, v, w, u, s0, *, chunk: int = 128,
+              backend: str | None = None, **kw):
+    if backend == "ref":
+        return ref.rwkv_scan_ref(r, k, v, w, u, s0)
+    return _rw.rwkv_scan(r, k, v, w, u, s0, chunk=chunk,
+                         interpret=_use_interpret(), **kw)

@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each reference implements the exact math the kernel claims, with no tiling,
+in float32 accumulation — the `assert_allclose` target for the interpret-
+mode kernel tests and the HLO path the dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nesting import StripeSpec
+
+
+def nested_matmul_ref(x: jax.Array, w: jax.Array, in_spec: StripeSpec,
+                      out_spec: StripeSpec,
+                      level: int | None = None) -> jax.Array:
+    """Block-lower-triangular stripe matmul (paper §4.2.1 width nesting).
+
+    x: [M, K_in], w: [K_in, N].  Output stripe i reads input stripes j<=i.
+    """
+    k_out = out_spec.levels if level is None else level
+    outs = []
+    for i in range(1, k_out + 1):
+        sl = out_spec.stripe_slice(i)
+        if sl.stop == sl.start:
+            continue
+        w_in = in_spec.width(min(i, in_spec.levels))
+        acc = jnp.dot(x[:, :w_in].astype(jnp.float32),
+                      w[:w_in, sl].astype(jnp.float32))
+        outs.append(acc)
+    return jnp.concatenate(outs, axis=-1).astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: int | None = None,
+                        softcap: float | None = None) -> jax.Array:
+    """q: [B,S,h,hd]; k/v: [B,T,kv,hd] (GQA: h % kv == 0)."""
+    b, s, h, hd = q.shape
+    t, n_kv = k.shape[1], k.shape[2]
+    g = h // n_kv
+    qg = q.reshape(b, s, n_kv, g, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         cache_len: jax.Array, *,
+                         window: int | None = None) -> jax.Array:
+    """q: [B,h,hd] one position; k/v: [B,S,kv,hd]; cache_len scalar/[B]."""
+    b, h, hd = q.shape
+    s, n_kv = k.shape[1], k.shape[2]
+    g = h // n_kv
+    cache_len = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+    qg = q.reshape(b, n_kv, g, hd)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    pos = jnp.arange(s)[None, :]
+    mask = pos < cache_len[:, None]
+    if window is not None:
+        mask &= pos >= cache_len[:, None] - window
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+def rwkv_scan_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                  u: jax.Array, s0: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    """RWKV6 recurrence.  r/k/v/w: [B,S,H,hd]; u: [H,hd]; s0: [B,H,hd,hd].
+
+        y_t = r_t . (S_{t-1} + (u*k_t) v_t^T);  S_t = diag(w_t) S + k_t v_t^T
+
+    Returns (y [B,S,H,hd], s_final).
+    """
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", rt,
+                       state + u.astype(jnp.float32)[..., :, None] * kv)
+        state = wt[..., :, None] * state + kv
+        return state, y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (rf, kf, vf, wf))
+    sN, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1).astype(r.dtype), sN

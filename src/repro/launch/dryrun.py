@@ -1,0 +1,380 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh (16x16 single-pod or 2x16x16 multi-pod),
+  2. builds abstract params/opt-state via jax.eval_shape (no allocation),
+  3. jits the right step (train_step / prefill / serve_step) with explicit
+     in/out shardings, ``.lower()``s it on ShapeDtypeStructs and
+     ``.compile()``s — proving the distribution config is coherent,
+  4. records memory_analysis / cost_analysis / per-collective byte counts
+     parsed from the compiled HLO into a JSON artifact for §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+      --shape train_4k --mesh single --out artifacts/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.shapes import (SHAPES, ShapeSpec, cell_supported,
+                                  input_specs)
+from repro.launch import shardings as sh
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import build_model
+from repro.optim.adamw import AdamW
+from repro.train.step import TrainState, make_train_step
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8,
+                "s16": 2, "u16": 2, "c64": 8, "c128": 16}
+
+
+def _shape_bytes(dt: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 0)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective accounting from the optimized (SPMD) HLO.
+
+    The post-optimization HLO references operands by name without types, so
+    sizes come from the *result* type plus replica-group math:
+      all-reduce:       operand = result
+      all-gather:       operand = result / group_size
+      reduce-scatter:   operand = result * group_size
+      all-to-all / collective-permute: operand = result
+
+    ``bytes``  — summed operand sizes (the spec's collective-term input)
+    ``traffic`` — ring-algorithm ICI bytes per device
+                  (AR: 2*R*(g-1)/g, AG: R*(g-1)/g, RS: O*(g-1)/g, CP: R).
+    """
+    out = {c: 0 for c in COLLECTIVES}
+    traffic = {c: 0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s+(.*?)\s+(" + "|".join(COLLECTIVES) +
+                      r")(-start)?\(", stripped)
+        if not m:
+            continue
+        result_types, op, is_start = m.group(1), m.group(2), m.group(3)
+        if f"{op}-done(" in stripped:
+            continue
+        shapes = _SHAPE_RE.findall(result_types)
+        if not shapes:
+            continue
+        # async-start results are (operand, result[, ...]) tuples: take max.
+        result = max(_shape_bytes(dt, dims) for dt, dims in shapes)
+        gm = _GROUP_RE.search(stripped)
+        if gm:
+            group = int(gm.group(2))
+        else:
+            gb = _GROUP_BRACE_RE.search(stripped)
+            group = len(gb.group(1).split(",")) if gb else 1
+        group = max(group, 1)
+        if op == "all-gather":
+            operand = result // group
+            tr = result * (group - 1) // group
+        elif op == "reduce-scatter":
+            operand = result * group
+            tr = operand * (group - 1) // group
+        elif op == "all-reduce":
+            operand = result
+            tr = 2 * result * (group - 1) // group
+        else:  # all-to-all, collective-permute
+            operand = result
+            tr = result
+        out[op] += operand
+        traffic[op] += tr
+        counts[op] += 1
+    out["total"] = sum(out[c] for c in COLLECTIVES)
+    out["traffic_total"] = sum(traffic[c] for c in COLLECTIVES)
+    out["traffic"] = traffic
+    out["counts"] = counts
+    return out
+
+
+def abstract_state(model, cfg, opt):
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    opt_state = jax.eval_shape(lambda p: opt.init(p), params)
+    return TrainState(params, opt_state, None)
+
+
+def _lower_cell(cfg, shape, mesh):
+    """Build + lower the right step for (cfg, shape) on ``mesh``."""
+    model = build_model(cfg)
+    batch = input_specs(cfg, shape)
+    bspecs = sh.named(mesh, sh.batch_specs(cfg, mesh, shape, batch))
+    if shape.kind == "train":
+        opt = AdamW(lr=3e-4)
+        state = abstract_state(model, cfg, opt)
+        sshard = sh.param_shardings(cfg, mesh, state)
+        step = make_train_step(model, cfg, opt)
+        jitted = jax.jit(step, in_shardings=(sshard, bspecs),
+                         out_shardings=(sshard, None))
+        return jitted.lower(state, batch)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pshard = sh.param_shardings(cfg, mesh, params)
+    if shape.kind == "prefill":
+        jitted = jax.jit(model.prefill, in_shardings=(pshard, bspecs),
+                         out_shardings=None)
+        return jitted.lower(params, batch)
+    caches = jax.eval_shape(
+        lambda: model.init_caches(shape.global_batch, shape.seq_len))
+    cshard = sh.cache_specs_tree(cfg, mesh, shape, caches)
+    jitted = jax.jit(model.decode_step,
+                     in_shardings=(pshard, bspecs, cshard),
+                     out_shardings=(None, cshard))
+    return jitted.lower(params, batch, caches)
+
+
+def _measure(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    flops = bytes_acc = None
+    if isinstance(cost, dict):
+        flops = cost.get("flops")
+        bytes_acc = cost.get("bytes accessed")
+    elif cost is not None:
+        flops = getattr(cost, "flops", None)
+        bytes_acc = getattr(cost, "bytes_accessed", None)
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(flops or 0.0), "bytes": float(bytes_acc or 0.0),
+            "coll": coll["total"], "traffic": coll["traffic_total"],
+            "coll_detail": coll}
+
+
+def _recurrence_flops(cfg, shape) -> float:
+    """Analytic per-device FLOPs of sequential recurrences (mamba/rwkv)
+    that hide inside time-dim scans (XLA counts the body once).  Small vs
+    matmuls, but added for honesty.  Train counts fwd+bwd(+remat) ~4x."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 4.0 if shape.kind == "train" else 1.0
+    per_tok = 0.0
+    for mixer, _ in cfg.layer_plan():
+        if mixer == "mamba":
+            per_tok += 10.0 * cfg.mamba_d_inner * cfg.mamba_d_state
+        elif mixer == "rwkv":
+            per_tok += 8.0 * cfg.d_model * cfg.rwkv_head_dim
+    return mult * per_tok * tokens / 256.0  # per device (single pod)
+
+
+def calibrate(cfg, shape, mesh) -> dict:
+    """Measured FLOPs/bytes/collectives via layer-unrolled composition.
+
+    XLA's cost analysis counts a while-loop body ONCE, so the scanned
+    production compile undercounts per-layer quantities by the trip count.
+    Fix: compile unrolled 1-period and 2-period variants (no layer scan,
+    attention unchunked so no time-scan either) and compose:
+
+        per_period = X(2p) - X(p);  total = X(p) - per_period
+                                            + per_period * (L / p)
+
+    Collectives are layer-level in every arch here (projection gathers/
+    reduces, MoE dispatch, logits reduction), so composition is exact for
+    them; matmul FLOPs compose exactly; recurrence FLOPs (inside time
+    scans) are added analytically via _recurrence_flops.
+    """
+    p = cfg.layer_period()
+    seq = shape.seq_len
+    common = dict(unroll_layers=True,
+                  attn_unroll_chunks=True,
+                  mamba_chunk=max(seq, 1),
+                  rwkv_chunk=max(seq, 1))
+    if cfg.encoder_layers:
+        cfg_a = cfg.replace(n_layers=1, encoder_layers=1, **common)
+        cfg_b = cfg.replace(n_layers=2, encoder_layers=2, **common)
+        periods = cfg.n_layers  # enc+dec scale together (4,4)
+    else:
+        cfg_a = cfg.replace(n_layers=p, **common)
+        cfg_b = cfg.replace(n_layers=2 * p, **common)
+        periods = cfg.n_layers / p
+    a = _measure(_lower_cell(cfg_a, shape, mesh).compile())
+    b = _measure(_lower_cell(cfg_b, shape, mesh).compile())
+    out = {}
+    for key in ("flops", "bytes", "coll", "traffic"):
+        per_period = b[key] - a[key]
+        base = a[key] - per_period
+        out[key] = base + per_period * periods
+    out["flops"] += _recurrence_flops(cfg, shape)
+    out["one_period"] = a
+    out["two_period"] = b
+    return out
+
+
+VARIANTS = {
+    # hillclimb levers (EXPERIMENTS.md §Perf)
+    "baseline": {},
+    "opt_banded": {"window_banded": True},
+    "opt_lastlogits": {"prefill_last_only": True},
+    "opt_savedots": {"remat_policy": "save_dots"},
+    "opt_losschunk": {"loss_chunk": 512},
+    "opt_all": {"window_banded": True, "prefill_last_only": True,
+                "remat_policy": "save_dots"},
+    "opt_sp": {"prefill_last_only": True, "_seq_shard": True},
+    "opt_banded_losschunk": {"window_banded": True, "loss_chunk": 1024},
+    "opt_moe_gather": {"moe_dispatch": "gather"},
+    # the paper's technique at production scale: width-nested variant;
+    # 'masked' is the paper-faithful dense-masked infrastructure burden,
+    # 'blocks' the TPU-native triangular execution (our nested kernel).
+    "anytime_masked": {"nest_levels": 4, "nest_backend": "masked"},
+    "anytime_blocks": {"nest_levels": 4, "nest_backend": "blocks"},
+}
+
+
+def run_cell(arch: str, shape: ShapeSpec, multi_pod: bool,
+             variant: str = "baseline",
+             calibrate_flops: bool = True) -> dict:
+    cfg = configs.get_config(arch)
+    if variant not in VARIANTS:
+        raise KeyError(f"unknown variant {variant!r}")
+    overrides = dict(VARIANTS[variant])
+    seq_shard = overrides.pop("_seq_shard", False)
+    cfg = cfg.replace(**overrides)
+    ok, reason = cell_supported(cfg, shape)
+    rec = {"arch": arch, "shape": shape.name, "kind": shape.kind,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "variant": variant, "status": "skip", "reason": reason}
+    if not ok:
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if seq_shard:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.models import transformer as _tfm
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        _tfm.ACTIVATION_SHARDING = NamedSharding(mesh, P(dp, "model", None))
+    t0 = time.time()
+    lowered = _lower_cell(cfg, shape, mesh)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    raw = _measure(compiled)
+
+    def g(obj, name):
+        try:
+            v = getattr(obj, name, None)
+            if v is None and isinstance(obj, dict):
+                v = obj.get(name)
+            return float(v) if v is not None else None
+        except Exception:
+            return None
+
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "n_devices": mesh.devices.size,
+        "flops_per_device": raw["flops"],
+        "bytes_per_device": raw["bytes"],
+        "collective_bytes_per_device": raw["coll_detail"],
+        "memory": {
+            "argument_size": g(mem, "argument_size_in_bytes"),
+            "output_size": g(mem, "output_size_in_bytes"),
+            "temp_size": g(mem, "temp_size_in_bytes"),
+            "generated_code_size": g(mem, "generated_code_size_in_bytes"),
+        },
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        "hlo_bytes": len(hlo),
+    })
+    if calibrate_flops and not multi_pod:
+        # Correct the while-body-counted-once undercount (see calibrate()).
+        cal = calibrate(cfg, shape, mesh)
+        if seq_shard:
+            from repro.models import transformer as _tfm
+            _tfm.ACTIVATION_SHARDING = None
+        rec["calibrated"] = {
+            "flops_per_device": cal["flops"],
+            "bytes_per_device": cal["bytes"],
+            "collective_bytes_per_device": cal["coll"],
+            "collective_traffic_per_device": cal["traffic"],
+            "one_period": {k: cal["one_period"][k]
+                           for k in ("flops", "bytes", "coll")},
+            "two_period": {k: cal["two_period"][k]
+                           for k in ("flops", "bytes", "coll")},
+        }
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = configs.ARCH_IDS if (args.all or not args.arch) \
+        else [args.arch]
+    shapes = list(SHAPES.values()) if (args.all or not args.shape) \
+        else [SHAPES[args.shape]]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}__{shape.name}__" \
+                      f"{'multi' if multi else 'single'}__{args.variant}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    with open(path) as f:
+                        old = json.load(f)
+                    done = old.get("status") == "skip" or (
+                        old.get("status") == "ok" and
+                        (multi or "calibrated" in old))
+                    if done:
+                        print(f"[cached] {tag}")
+                        continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, multi, args.variant)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape.name,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "variant": args.variant,
+                           "status": "fail", "error": str(e)[-2000:],
+                           "traceback": traceback.format_exc()[-4000:]}
+                    n_fail += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"  -> {rec['status']} "
+                      f"(compile {rec.get('compile_s', '-')}s, "
+                      f"flops {rec.get('flops_per_device', '-')})",
+                      flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,36 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (spec requirement): importing this
+module never touches jax device state, so smoke tests and benchmarks see
+one CPU device while the dry-run (which sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import) sees the full placeholder fleet.
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — the pod
+axis extends data parallelism across the ICI/DCN boundary.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Axes the global batch shards over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Tiny mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    mp = model_parallel
+    while mp > 1 and n % mp:
+        mp //= 2
+    return jax.make_mesh((n // mp, mp), ("data", "model"))

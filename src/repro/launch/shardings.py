@@ -1,0 +1,219 @@
+"""PartitionSpec rules: parameters, optimizer state, batches, caches.
+
+Strategy (baseline; hillclimb iterates):
+  * DP  — batch over (pod, data)
+  * TP  — attention/MLP inner dims over model (Megatron pattern: column-
+          parallel in-projections, row-parallel out-projections, so each
+          block needs one all-reduce on its output)
+  * EP  — MoE expert dim over model
+  * SP  — decode KV-cache sequence over data (and model when the kv-head
+          dim cannot shard) for small-batch long-context cells
+  * vocab over model (embed rows / unembed cols / logits)
+
+Rules are *name-based* on the trailing dims; any leading stacking dims
+(scan repeats, whisper layer stacks, expert dim handled explicitly) get
+``None``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+
+# name -> (base trailing ndim, trailing spec)
+_BASE_RULES: dict[str, tuple[int, tuple]] = {
+    "embed": (2, ("model", None)),
+    "unembed": (2, (None, "model")),
+    "final_norm": (1, (None,)),
+    "enc_final_norm": (1, (None,)),
+    # attention
+    "wq": (2, (None, "model")),
+    "wk": (2, (None, "model")),
+    "wv": (2, (None, "model")),
+    "wo": (2, ("model", None)),
+    "bq": (1, ("model",)),
+    "bk": (1, ("model",)),
+    "bv": (1, ("model",)),
+    "norm": (1, (None,)),
+    # dense mlp
+    "w_gate": (2, (None, "model")),
+    "w_up": (2, (None, "model")),
+    "w_down": (2, ("model", None)),
+    # moe (3-dim leaves; expert dim sharded — see spec_for)
+    "router": (2, (None, None)),
+    # mamba
+    "in_proj": (2, (None, "model")),
+    "conv_w": (2, (None, "model")),
+    "conv_b": (1, ("model",)),
+    "x_proj": (2, ("model", None)),
+    "dt_proj": (2, (None, "model")),
+    "dt_bias": (1, ("model",)),
+    "a_log": (2, ("model", None)),
+    "d_skip": (1, ("model",)),
+    "out_proj": (2, ("model", None)),
+    # rwkv
+    "w_r": (2, (None, "model")),
+    "w_k": (2, (None, "model")),
+    "w_v": (2, (None, "model")),
+    "w_g": (2, (None, "model")),
+    "w_o": (2, ("model", None)),
+    "decay_w0": (1, (None,)),
+    "decay_a": (2, (None, None)),
+    "decay_b": (2, (None, "model")),
+    "bonus_u": (1, ("model",)),
+    "ln_x_g": (1, (None,)),
+    "ln_x_b": (1, (None,)),
+    "mu_r": (1, (None,)), "mu_k": (1, (None,)), "mu_v": (1, (None,)),
+    "mu_g": (1, (None,)), "mu_w": (1, (None,)),
+    "cmix_mu_k": (1, (None,)), "cmix_mu_r": (1, (None,)),
+    "cmix_wk": (2, (None, "model")),
+    "cmix_wv": (2, ("model", None)),
+    "cmix_wr": (2, (None, "model")),
+    "cmix_norm": (1, (None,)),
+}
+
+_MOE_LEAVES = {"w_gate", "w_up", "w_down"}
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "idx", last)))
+
+
+def spec_for(cfg: ModelConfig, path, leaf) -> P:
+    """PartitionSpec for one parameter (or optimizer-moment) leaf."""
+    name = _leaf_name(path)
+    if name in ("step",):
+        return P()
+    ndim = len(leaf.shape)
+    if cfg.n_experts and name in _MOE_LEAVES and ndim >= 3 and \
+            leaf.shape[-3] == cfg.n_experts and \
+            (leaf.shape[-2] in (cfg.d_model, cfg.d_ff)):
+        # Expert-parallel: E over model, per-expert weights unsharded.
+        base = ("model", None, None)
+        return P(*((None,) * (ndim - 3) + base))
+    if name not in _BASE_RULES:
+        # Unknown leaf: replicate (safe default).
+        return P(*((None,) * ndim))
+    base_nd, base = _BASE_RULES[name]
+    if name == "unembed" and cfg.vocab % 16:
+        base = (None, None)        # whisper's odd vocab: replicate
+    if name == "embed" and cfg.vocab % 16:
+        base = (None, None)
+    return P(*((None,) * (ndim - base_nd) + tuple(base)))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, tree) -> Any:
+    """NamedShardings for a params/opt-state pytree (same rules)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = [NamedSharding(mesh, spec_for(cfg, path, leaf))
+           for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------- #
+# Batch / cache shardings                                                #
+# --------------------------------------------------------------------- #
+def _dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec,
+                batch: dict) -> dict:
+    """PartitionSpecs for an input_specs() batch dict."""
+    dp = _dp_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    b = shape.global_batch
+    shard_batch = b % n_dp == 0
+    out = {}
+    for key, leaf in batch.items():
+        nd = len(leaf.shape)
+        if key == "pos3d":
+            out[key] = P(None, dp if shard_batch else None, None)
+        elif key == "cache_len":
+            out[key] = P()
+        elif key == "frames":
+            out[key] = P(dp if shard_batch else None, None, None)
+        elif key in ("tokens", "labels"):
+            if nd == 2 and shard_batch:
+                # Shard seq too when it is long and batch is thin.
+                out[key] = P(dp, None)
+            elif nd == 2:
+                out[key] = P(None, None)
+            else:
+                out[key] = P(*(None,) * nd)
+        else:
+            out[key] = P(*(None,) * nd)
+    return out
+
+
+def cache_specs_tree(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec,
+                     caches) -> Any:
+    """Shardings for decode caches.
+
+    KV buffers [..., B, S, kv, hd]:
+      * batch over (pod, data) when divisible, else
+      * sequence over (data) [SP], and
+      * kv-heads over model when divisible, else sequence over model.
+    Recurrent states (mamba [.., B, di, ds] / rwkv [.., B, h, hd, hd] and
+    shift tails [.., B, d]): batch over dp if divisible; feature dim over
+    model.
+    """
+    dp = _dp_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    n_mp = mesh.shape["model"]
+    b = shape.global_batch
+    batch_ok = b % n_dp == 0
+
+    def one(path, leaf):
+        shp = leaf.shape
+        nd = len(shp)
+        name = _leaf_name(path) if path else ""
+        # KV cache: trailing (B, S, kv, hd)
+        if nd >= 4 and shp[-1] == cfg.head_dim and \
+                shp[-2] == cfg.n_kv_heads and shp[-3] == shape.seq_len:
+            kv_ok = cfg.n_kv_heads % n_mp == 0
+            spec = [None] * (nd - 4)
+            spec.append(dp if batch_ok else None)          # B
+            if batch_ok:
+                spec.append("model" if not kv_ok else None)  # S
+            else:
+                spec.append(("data", "model") if not kv_ok else "data")
+            spec.append("model" if kv_ok else None)          # kv
+            spec.append(None)                                # hd
+            return P(*spec)
+        # rwkv wkv state [.., B, h, hd, hd]
+        if nd >= 4 and shp[-1] == shp[-2] == cfg.rwkv_head_dim and cfg.rwkv:
+            spec = [None] * (nd - 4) + [dp if batch_ok else None,
+                                        "model" if shp[-3] % n_mp == 0
+                                        else None, None, None]
+            return P(*spec)
+        # mamba ssm state [.., B, di, ds]
+        if nd >= 3 and shp[-1] == cfg.mamba_d_state and \
+                shp[-2] == cfg.mamba_d_inner:
+            return P(*([None] * (nd - 3) +
+                       [dp if batch_ok else None, "model", None]))
+        # conv tail [.., B, dc-1, di]
+        if nd >= 3 and shp[-1] == cfg.mamba_d_inner:
+            return P(*([None] * (nd - 3) +
+                       [dp if batch_ok else None, None, "model"]))
+        # shift tails [.., B, d]
+        if nd >= 2 and shp[-1] == cfg.d_model:
+            return P(*([None] * (nd - 2) +
+                       [dp if batch_ok else None, None]))
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    out = [NamedSharding(mesh, one(p, l)) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def named(mesh: Mesh, tree_of_specs) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,88 @@
+"""Shared model primitives: norms, rotary embeddings (incl. M-RoPE), init."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * gamma
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * gamma + beta
+
+
+# --------------------------------------------------------------------- #
+# Rotary position embeddings                                             #
+# --------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    """[head_dim/2] inverse frequencies."""
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Standard RoPE.  x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    hd = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(hd, theta), dtype=jnp.float32)
+    ang = positions[..., :, None].astype(jnp.float32) * inv       # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., :, None, :]                           # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions_3d: jax.Array, theta: float,
+                sections: tuple[int, int, int]) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL, arXiv:2409.12191).
+
+    The head_dim/2 frequency slots are split into (temporal, height, width)
+    sections; each section rotates by its own position stream.  For pure
+    text all three streams are equal and M-RoPE == RoPE.
+
+    x: [batch, seq, heads, head_dim]; positions_3d: [3, batch, seq].
+    """
+    hd = x.shape[-1]
+    if sum(sections) != hd // 2:
+        raise ValueError(f"M-RoPE sections {sections} != head_dim/2 {hd // 2}")
+    inv = jnp.asarray(rope_freqs(hd, theta), dtype=jnp.float32)   # [hd/2]
+    # Section id of each frequency slot: 0=t, 1=h, 2=w.
+    sec = np.repeat(np.arange(3), np.asarray(sections))           # [hd/2]
+    pos = positions_3d.astype(jnp.float32)                        # [3, B, S]
+    pos_per_slot = pos[sec]                                       # [hd/2, B, S]
+    ang = jnp.einsum("fbs,f->bsf", pos_per_slot, inv)             # [B, S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# Parameter init                                                         #
+# --------------------------------------------------------------------- #
+def dense_init(key: jax.Array, shape: tuple[int, ...], dtype,
+               scale: float | None = None) -> jax.Array:
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: tuple[int, ...], dtype) -> jax.Array:
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+            ).astype(dtype)
+
+
+def split_keys(key: jax.Array, n: int) -> list[jax.Array]:
+    return list(jax.random.split(key, n))

@@ -1,0 +1,58 @@
+"""Feed-forward blocks: SwiGLU (LLaMA/Qwen-style) + width-nested variant."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.nesting import StripeSpec, nested_linear, nested_norm_linear
+from repro.models.common import dense_init, rms_norm, split_keys
+
+
+def mlp_param_shapes(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {"w_gate": (d, f), "w_up": (d, f), "w_down": (f, d), "norm": (d,)}
+
+
+def mlp_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    shapes = mlp_param_shapes(cfg)
+    keys = split_keys(key, len(shapes))
+    out = {}
+    for (name, shape), k in zip(sorted(shapes.items()), keys):
+        if name == "norm":
+            out[name] = jnp.ones(shape, dtype)
+        else:
+            out[name] = dense_init(k, shape, dtype)
+    return out
+
+
+def mlp(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xn = rms_norm(x, params["norm"], cfg.norm_eps)
+    gate = xn @ params["w_gate"]
+    up = xn @ params["w_up"]
+    return (jax.nn.silu(gate) * up) @ params["w_down"]
+
+
+# --------------------------------------------------------------------- #
+# Width-nested MLP (anytime)                                             #
+# --------------------------------------------------------------------- #
+def mlp_stripe_specs(cfg: ModelConfig) -> tuple[StripeSpec, StripeSpec]:
+    return (StripeSpec.pow2(cfg.d_model, cfg.nest_levels),
+            StripeSpec.pow2(cfg.d_ff, cfg.nest_levels))
+
+
+def nested_mlp(params: dict, x: jax.Array, cfg: ModelConfig,
+               level: int | None = None) -> jax.Array:
+    d_spec, f_spec = mlp_stripe_specs(cfg)
+    be = cfg.nest_backend
+    gate = nested_norm_linear(x, params["norm"], params["w_gate"],
+                              d_spec, f_spec, level=level,
+                              eps=cfg.norm_eps, backend=be)
+    up = nested_norm_linear(x, params["norm"], params["w_up"],
+                            d_spec, f_spec, level=level,
+                            eps=cfg.norm_eps, backend=be)
+    hidden = jax.nn.silu(gate) * up
+    return nested_linear(hidden, params["w_down"], f_spec, d_spec,
+                         level=level, backend=be)

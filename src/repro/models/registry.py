@@ -1,0 +1,109 @@
+"""Uniform model API over all architectures: ``build_model(cfg)``.
+
+Every arch exposes the same four entry points so the launcher, dry-run,
+serving engine and benchmarks are arch-agnostic:
+
+    model.init(key)                          -> params
+    model.train_logits(params, batch)        -> (logits, aux_loss)
+    model.prefill(params, batch)             -> (logits, caches)
+    model.decode_step(params, batch, caches) -> (logits, caches)
+    model.init_caches(batch_size, max_len)   -> cache pytree
+
+``batch`` is a dict; which keys exist depends on the family (see
+``configs/shapes.py`` input_specs):
+    tokens [B,S] (all),  labels [B,S] (train),
+    pos3d [3,B,S] (vlm M-RoPE),  frames [B,T,d] (encdec stub frontend),
+    cache_len [] (decode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.models import whisper as wsp
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], dict]
+    train_logits: Callable[..., tuple[jax.Array, jax.Array]]
+    prefill: Callable[..., tuple[jax.Array, Any]]
+    decode_step: Callable[..., tuple[jax.Array, Any]]
+    init_caches: Callable[[int, int], Any]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.encoder_layers:
+        return _build_encdec(cfg)
+    return _build_lm(cfg)
+
+
+def _build_lm(cfg: ModelConfig) -> Model:
+    def train_logits(params, batch, level=None, all_levels=False):
+        out = tfm.lm_apply(params, cfg, batch["tokens"],
+                           pos3d=batch.get("pos3d"), mode="train",
+                           level=level, all_levels=all_levels)
+        return out.logits, out.aux_loss
+
+    def prefill(params, batch):
+        out = tfm.lm_apply(params, cfg, batch["tokens"],
+                           pos3d=batch.get("pos3d"), mode="prefill")
+        return out.logits, out.caches
+
+    def decode_step(params, batch, caches):
+        out = tfm.lm_apply(params, cfg, batch["tokens"],
+                           pos3d=batch.get("pos3d"), mode="decode",
+                           caches=caches, cache_len=batch["cache_len"])
+        return out.logits, out.caches
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: tfm.init_lm(key, cfg),
+        train_logits=train_logits,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_caches=lambda b, s: tfm.init_caches(cfg, b, s),
+    )
+
+
+def _build_encdec(cfg: ModelConfig) -> Model:
+    def train_logits(params, batch, level=None, all_levels=False):
+        out = wsp.encdec_train(params, cfg, batch["frames"], batch["tokens"])
+        return out.logits, out.aux_loss
+
+    def prefill(params, batch):
+        h_enc = wsp.encode(params, cfg, batch["frames"])
+        ckv = wsp.cross_kv(params, cfg, h_enc)
+        out = wsp.decoder_apply(params, cfg, batch["tokens"], ckv,
+                                mode="prefill")
+        return out.logits, {"self": out.caches, "cross": ckv}
+
+    def decode_step(params, batch, caches):
+        out = wsp.encdec_decode(params, cfg, batch["tokens"],
+                                caches["cross"], caches["self"],
+                                batch["cache_len"])
+        return out.logits, {"self": out.caches, "cross": caches["cross"]}
+
+    def init_caches(batch, max_len):
+        self_c = wsp.init_decoder_caches(cfg, batch, max_len)
+        dtype = jnp.dtype(cfg.dtype)
+        # Cross K/V sized to the encoder frame count (= max_len stand-in).
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        cross = (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+        return {"self": self_c, "cross": cross}
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: wsp.init_encdec(key, cfg),
+        train_logits=train_logits,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_caches=init_caches,
+    )

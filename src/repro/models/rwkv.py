@@ -1,0 +1,183 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free mixer with
+data-dependent per-channel decay, plus the RWKV channel-mix FFN.
+
+Time mixing (per head, head_dim = 64):
+
+    y_t = r_t . (S_{t-1} + (u (.) k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+with w_t = exp(-exp(w0 + tanh(x_w A) B)) the data-dependent decay (low-rank
+"lora" form).  State S is [head_dim, head_dim] per head — O(1) memory in
+sequence length, which is why rwkv6 runs the ``long_500k`` cell.
+
+Training/prefill uses the same chunked double-scan pattern as Mamba; the
+``rwkv_scan`` Pallas kernel implements the chunk recurrence as MXU matmuls.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, layer_norm, rms_norm, split_keys
+
+
+class RwkvState(NamedTuple):
+    wkv: jax.Array     # [B, heads, head_dim, head_dim] (f32)
+    shift_t: jax.Array  # [B, d] last input of time-mix
+    shift_c: jax.Array  # [B, d] last input of channel-mix
+
+
+def rwkv_param_shapes(cfg: ModelConfig) -> dict:
+    d, lora = cfg.d_model, cfg.rwkv_decay_lora
+    return {
+        "mu_r": (d,), "mu_k": (d,), "mu_v": (d,), "mu_g": (d,), "mu_w": (d,),
+        "w_r": (d, d), "w_k": (d, d), "w_v": (d, d), "w_g": (d, d),
+        "w_o": (d, d),
+        "decay_w0": (d,), "decay_a": (d, lora), "decay_b": (lora, d),
+        "bonus_u": (d,),
+        "ln_x_g": (d,), "ln_x_b": (d,),
+        "norm": (d,),
+        # channel mix
+        "cmix_mu_k": (d,), "cmix_mu_r": (d,),
+        "cmix_wk": (d, cfg.d_ff), "cmix_wv": (cfg.d_ff, d), "cmix_wr": (d, d),
+        "cmix_norm": (d,),
+    }
+
+
+def rwkv_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    shapes = rwkv_param_shapes(cfg)
+    keys = split_keys(key, len(shapes))
+    out = {}
+    for (name, shape), k in zip(sorted(shapes.items()), keys):
+        if name in ("norm", "cmix_norm", "ln_x_g"):
+            out[name] = jnp.ones(shape, dtype)
+        elif name.startswith("mu_") or name.startswith("cmix_mu"):
+            out[name] = jnp.full(shape, 0.5, dtype)
+        elif name == "decay_w0":
+            out[name] = jnp.full(shape, -1.0, jnp.float32)
+        elif name in ("bonus_u", "ln_x_b"):
+            out[name] = jnp.zeros(shape, jnp.float32 if name == "bonus_u"
+                                  else dtype)
+        else:
+            out[name] = dense_init(k, shape, dtype)
+    return out
+
+
+def _token_shift(x: jax.Array, mu: jax.Array,
+                 prev: jax.Array | None) -> jax.Array:
+    """lerp(x_{t-1}, x_t, mu);  prev: [B,d] streaming tail or None (zeros)."""
+    if prev is None:
+        prev_seq = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev_seq = jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1)
+    return mu * x + (1.0 - mu) * prev_seq
+
+
+def _wkv_chunk_scan(s0: jax.Array, r, k, v, w, u, chunk: int):
+    """Sequential-in-chunk recurrence.  All args [B,S,h,hd] except s0
+    [B,h,hd,hd] and u [h,hd].  Returns (sN, y [B,S,h,hd])."""
+    b, s, h, hd = r.shape
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        # k=0 padding contributes nothing; w=1 padding leaves decay alone.
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = map(zpad, (r, k, v))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    s_padded = n_chunks * chunk
+
+    def to_chunks(t):
+        return t.reshape(b, n_chunks, chunk, h, hd).swapaxes(0, 1) \
+                .swapaxes(1, 2)   # [n, chunk, B, h, hd]
+
+    xs = tuple(map(to_chunks, (r, k, v, w)))
+
+    def inner(state, step_xs):
+        rt, kt, vt, wt = step_xs      # [B,h,hd]
+        kv = kt[..., :, None] * vt[..., None, :]        # [B,h,hd,hd]
+        y = jnp.einsum("bhi,bhij->bhj", rt,
+                       state + u[..., :, None] * kv)
+        state = wt[..., :, None] * state + kv
+        return state, y
+
+    def outer(state, chunk_xs):
+        return jax.checkpoint(
+            lambda st, cx: jax.lax.scan(inner, st, cx))(state, chunk_xs)
+
+    sN, ys = jax.lax.scan(outer, s0, xs)
+    y = ys.reshape(s_padded, b, h, hd).swapaxes(0, 1)[:, :s]
+    return sN, y
+
+
+def rwkv_time_mix(params: dict, x: jax.Array, cfg: ModelConfig,
+                  state: RwkvState | None = None
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (out [B,S,d], new wkv state, new shift tail)."""
+    b, s, d = x.shape
+    h, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    xn = rms_norm(x, params["norm"], cfg.norm_eps)
+    prev = state.shift_t if state is not None else None
+
+    xr = _token_shift(xn, params["mu_r"], prev)
+    xk = _token_shift(xn, params["mu_k"], prev)
+    xv = _token_shift(xn, params["mu_v"], prev)
+    xg = _token_shift(xn, params["mu_g"], prev)
+    xw = _token_shift(xn, params["mu_w"], prev)
+
+    r = (xr @ params["w_r"]).reshape(b, s, h, hd)
+    k = (xk @ params["w_k"]).reshape(b, s, h, hd)
+    v = (xv @ params["w_v"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ params["w_g"])
+    decay_raw = params["decay_w0"] + \
+        jnp.tanh(xw @ params["decay_a"]) @ params["decay_b"]
+    w = jnp.exp(-jnp.exp(decay_raw.astype(jnp.float32)))   # in (0,1)
+    w = w.reshape(b, s, h, hd)
+
+    u = params["bonus_u"].reshape(h, hd).astype(jnp.float32)
+    s0 = state.wkv if state is not None else \
+        jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    if s == 1:
+        rt, kt, vt, wt = rf[:, 0], kf[:, 0], vf[:, 0], w[:, 0]
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", rt, s0 + u[..., :, None] * kv)
+        sN = wt[..., :, None] * s0 + kv
+        y = y[:, None]
+    else:
+        chunk = min(cfg.rwkv_chunk, s)
+        sN, y = _wkv_chunk_scan(s0, rf, kf, vf, w, u, chunk)
+
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = layer_norm(y.reshape(b * s, h, hd).reshape(b * s, d),
+                   params["ln_x_g"], params["ln_x_b"]).reshape(b, s, d)
+    out = (y * g) @ params["w_o"]
+    return out, sN, xn[:, -1, :]
+
+
+def rwkv_channel_mix(params: dict, x: jax.Array, cfg: ModelConfig,
+                     state: RwkvState | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    """RWKV FFN.  Returns (out, new channel shift tail)."""
+    xn = rms_norm(x, params["cmix_norm"], cfg.norm_eps)
+    prev = state.shift_c if state is not None else None
+    xk = _token_shift(xn, params["cmix_mu_k"], prev)
+    xr = _token_shift(xn, params["cmix_mu_r"], prev)
+    k = jnp.square(jax.nn.relu(xk @ params["cmix_wk"]))
+    out = jax.nn.sigmoid(xr @ params["cmix_wr"]) * (k @ params["cmix_wv"])
+    return out, xn[:, -1, :]
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int) -> RwkvState:
+    dtype = jnp.dtype(cfg.dtype)
+    return RwkvState(
+        wkv=jnp.zeros((batch, cfg.rwkv_n_heads, cfg.rwkv_head_dim,
+                       cfg.rwkv_head_dim), jnp.float32),
+        shift_t=jnp.zeros((batch, cfg.d_model), dtype),
+        shift_c=jnp.zeros((batch, cfg.d_model), dtype))

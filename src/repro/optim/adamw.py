@@ -1,0 +1,87 @@
+"""AdamW in pure JAX (no optax dependency), pytree-native.
+
+State layout mirrors the params pytree (``m``/``v`` per leaf), so the same
+PartitionSpecs shard optimizer state and parameters identically — required
+for the dry-run memory budget at 32B+ scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Any = 3e-4          # float or callable(step) -> float
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def update(self, grads, state: AdamWState, params
+               ) -> tuple[Any, AdamWState, dict]:
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        gnorm = global_norm(grads)
+        metrics = {"grad_norm": gnorm}
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm /
+                                jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mu, g: b1 * mu + (1 - b1) *
+                         g.astype(jnp.float32), state.m, grads)
+        v = jax.tree.map(lambda nu, g: b2 * nu + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)), state.v, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, mu, nu):
+            mh = mu / bc1
+            vh = nu / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay and p.ndim >= 2:   # no decay on norms/bias
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        metrics["lr"] = jnp.asarray(lr, jnp.float32)
+        return new_params, AdamWState(step, m, v), metrics
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    """Linear warmup + cosine decay to ``floor * peak_lr``."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+    return lr

@@ -1,0 +1,43 @@
+"""Elastic re-meshing: rebuild the mesh from whatever devices survive and
+reshard the training state onto it.
+
+Because checkpoints store *global* arrays (checkpoint/io.py) and the data
+pipeline is a pure function of (step, host, n_hosts), scaling from
+2x16x16 -> 16x16 (pod loss) or 16x16 -> 16x8 (host loss) is: pick the new
+mesh shape, recompute shardings from the same PartitionSpec rules, restore.
+Nothing about the model code changes — GSPMD re-partitions.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def best_mesh_shape(n_devices: int, model_parallel: int
+                    ) -> tuple[int, ...]:
+    """Largest (data, model) grid with the requested TP degree that fits
+    the surviving device count; drops TP degree if it no longer divides."""
+    while model_parallel > 1 and n_devices % model_parallel:
+        model_parallel //= 2
+    return (n_devices // model_parallel, model_parallel)
+
+
+def remesh(devices=None, model_parallel: int = 1) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    shape = best_mesh_shape(len(devices), model_parallel)
+    arr = np.asarray(devices[:shape[0] * shape[1]]).reshape(shape)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard_state(state, mesh: Mesh, spec_fn) -> object:
+    """device_put every leaf with the sharding its PartitionSpec rule gives
+    on the NEW mesh.  ``spec_fn(path, leaf) -> PartitionSpec``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    out = []
+    for path, leaf in flat:
+        spec = spec_fn(path, leaf)
+        out.append(jax.device_put(
+            np.asarray(leaf), NamedSharding(mesh, spec or PartitionSpec())))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,72 @@
+"""Fault-tolerant training supervisor: checkpoint/restart + failure
+injection for tests.
+
+The loop contract at 1000+ nodes:
+
+* the data pipeline is a pure function of (step, host) — no host needs any
+  other host's state to resume (data/synthetic.py);
+* checkpoints are atomic (os.replace) and carry the step, so a restart
+  resumes bit-exactly;
+* a restart may come up on a DIFFERENT mesh (elastic): restore reshard
+  happens in checkpoint/io.py via device_put with the new shardings;
+* stragglers are detected by the same Kalman machinery ALERT uses for its
+  global slow-down factor — one ScalarKalman per host on step-time ratios,
+  alarm at mu + 3 sigma (runtime/straggler.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable
+
+from repro.checkpoint import io as ckpt_io
+
+
+class InjectedFailure(RuntimeError):
+    """Raised by tests to simulate a node crash mid-training."""
+
+
+@dataclasses.dataclass
+class Supervisor:
+    """Drives train_step with periodic checkpointing and restart-on-crash."""
+
+    train_step: Callable          # (state, batch) -> (state, metrics)
+    batch_at: Callable            # (step) -> batch
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_restarts: int = 3
+
+    def run(self, state, start_step: int, n_steps: int,
+            fail_at: int | None = None, on_metrics=None):
+        """Run to ``start_step + n_steps``; optionally raise an
+        InjectedFailure once at global step ``fail_at`` (before the
+        checkpoint of that step) to exercise the restart path."""
+        step = start_step
+        failed_once = False
+        restarts = 0
+        while step < start_step + n_steps:
+            try:
+                if fail_at is not None and step == fail_at \
+                        and not failed_once:
+                    failed_once = True
+                    raise InjectedFailure(f"simulated crash at step {step}")
+                batch = self.batch_at(step)
+                state, metrics = self.train_step(state, batch)
+                if on_metrics is not None:
+                    on_metrics(step, metrics)
+                step += 1
+                if step % self.ckpt_every == 0:
+                    ckpt_io.save(self.ckpt_dir, state, step=step)
+            except InjectedFailure:
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                state, step = self.restore(state)
+        ckpt_io.save(self.ckpt_dir, state, step=step)
+        return state, step
+
+    def restore(self, like_state):
+        if not os.path.exists(self.ckpt_dir):
+            return like_state, 0
+        return ckpt_io.restore(self.ckpt_dir, like_state)

@@ -1,0 +1,52 @@
+"""Straggler detection = the paper's global-slow-down mechanism at pod
+scale.
+
+ALERT's key estimation idea (one slow-down factor, updated from any
+observation, predicting all configurations) maps 1:1 onto the slow-host
+problem: each host's per-step wall time, divided by the fleet median,
+is that host's xi.  A per-host ScalarKalman smooths it; mu > threshold
+(default: fleet mean + 3 fleet-sigma, floored at ratio 1.3) flags the host.
+
+Mitigations the supervisor can take (returned as recommendations):
+  * "reshard": drop the host and re-mesh (elastic.py) — persistent HW fault
+  * "tolerate": transient contention — ALERT's controller already absorbs
+    it via the global xi (conservative config picks)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+
+from repro.core.kalman import ScalarKalman
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    n_hosts: int
+    alarm_sigma: float = 3.0
+    min_ratio: float = 1.3
+    persistent_after: int = 5
+
+    def __post_init__(self):
+        self.filters = [ScalarKalman() for _ in range(self.n_hosts)]
+        self.alarm_counts = [0] * self.n_hosts
+
+    def observe(self, step_times: list[float]) -> list[int]:
+        """Feed one step's per-host wall times; returns flagged host ids."""
+        med = statistics.median(step_times)
+        flagged = []
+        for h, t in enumerate(step_times):
+            f = self.filters[h]
+            f.observe(t / max(med, 1e-12))
+            threshold = max(1.0 + self.alarm_sigma * f.std, self.min_ratio)
+            if f.mean > threshold:
+                self.alarm_counts[h] += 1
+                flagged.append(h)
+            else:
+                self.alarm_counts[h] = 0
+        return flagged
+
+    def recommendation(self, host: int) -> str:
+        return "reshard" if self.alarm_counts[host] >= \
+            self.persistent_after else "tolerate"

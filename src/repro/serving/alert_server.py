@@ -1,0 +1,107 @@
+"""The end-to-end ALERT serving loop over a REAL model on this host.
+
+Ties together: ServeEngine (per-level compiled programs), AlertController
+(Kalman feedback + Eq. 4/5 selection), DeadlineBatcher, and a measured
+ProfileTable built at startup (paper: t^train profiling).  This is what
+``examples/serve_alert.py`` drives.
+
+Power on this host cannot be actuated (see DESIGN.md §2), so the power
+dimension is bookkeeping through the same PowerModel the profiles use; the
+DNN dimension (anytime level) is fully real — levels are separately
+compiled programs with genuinely different latencies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.controller import AlertController, Constraints, Goal
+from repro.core.power import PowerModel
+from repro.core.profiles import Candidate, ProfileTable
+from repro.serving.engine import ServeEngine
+
+
+@dataclasses.dataclass
+class ServedInput:
+    level: int
+    power_cap: float
+    latency: float
+    missed: bool
+    accuracy: float
+    energy: float
+    feasible: bool
+
+
+class AlertServer:
+    def __init__(self, engine: ServeEngine, params,
+                 level_accuracies: list[float], goal: Goal,
+                 power_model: PowerModel | None = None,
+                 n_power_buckets: int = 4,
+                 profile_iters: int = 3, q_fail: float = 0.0,
+                 prompt_len: int = 8, gen_tokens: int = 4):
+        self.engine = engine
+        self.params = params
+        self.goal = goal
+        self.prompt_len = prompt_len
+        self.gen_tokens = gen_tokens
+        pm = power_model or PowerModel()
+        self.power_model = pm
+        cfg = engine.model.cfg
+        levels = engine.levels
+
+        # --- profiling pass (t^train): measure each level on this host ---
+        base = np.zeros(len(levels))
+        prompt = np.zeros((engine.batch_size, prompt_len), np.int32)
+        for li, lvl in enumerate(levels):
+            self.engine.generate(params, prompt, gen_tokens, level=lvl)
+            ts = []
+            for _ in range(profile_iters):
+                r = self.engine.generate(params, prompt, gen_tokens,
+                                         level=lvl)
+                ts.append(r["latency"])
+            base[li] = float(np.mean(ts))
+
+        caps = pm.buckets(n_power_buckets)
+        lat = np.zeros((len(levels), len(caps)))
+        pw = np.zeros_like(lat)
+        for j, cap in enumerate(caps):
+            f = pm.speed_fraction(cap)
+            lat[:, j] = base / f
+            pw[:, j] = pm.power_at_fraction(f)
+        cands = [
+            Candidate(name=f"level{lvl}", flops=0.0, bytes_hbm=0.0,
+                      accuracy=level_accuracies[li],
+                      is_anytime_level=cfg.nest_levels > 1,
+                      anytime_group="anytime" if cfg.nest_levels > 1
+                      else None, level=li + 1)
+            for li, lvl in enumerate(levels)]
+        self.table = ProfileTable(cands, caps, lat, pw, q_fail=q_fail)
+        self.controller = AlertController(self.table, goal)
+        self.history: list[ServedInput] = []
+
+    def serve_one(self, prompt: np.ndarray, constraints: Constraints
+                  ) -> ServedInput:
+        d = self.controller.select(constraints)
+        lvl = self.engine.levels[d.model_index]
+        r = self.engine.generate(self.params, prompt, self.gen_tokens,
+                                 level=lvl, deadline_s=constraints.deadline)
+        lat = r["latency"]
+        missed = (lat > constraints.deadline) or not r["complete"]
+        acc = self.table.candidates[d.model_index].accuracy \
+            if not missed else self.table.q_fail
+        f = self.power_model.speed_fraction(d.power_cap)
+        p = self.power_model.power_at_fraction(f)
+        run_t = min(lat, constraints.deadline)
+        energy = p * run_t + self.controller.idle_power.phi * p * \
+            max(constraints.deadline - run_t, 0.0)
+        self.controller.observe(
+            run_t, deadline_missed=missed,
+            idle_power=0.25 * p, delivered_accuracy=acc)
+        out = ServedInput(level=lvl or 0, power_cap=d.power_cap,
+                          latency=lat, missed=missed, accuracy=acc,
+                          energy=energy, feasible=d.feasible)
+        self.history.append(out)
+        return out

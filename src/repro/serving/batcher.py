@@ -1,0 +1,54 @@
+"""Deadline-aware request batching.
+
+Requests carry absolute deadlines; the batcher forms fixed-size batches in
+earliest-deadline-first order and reports the *effective* batch deadline
+(the tightest member's), which is what the ALERT controller schedules
+against.  Late requests that can no longer make any level-1 latency are
+failed fast (admission control) instead of poisoning a batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any
+
+_counter = itertools.count()
+
+
+@dataclasses.dataclass(order=False)
+class Request:
+    deadline: float                # absolute time (s)
+    payload: Any = None
+    arrival: float = 0.0
+    req_id: int = dataclasses.field(default_factory=lambda: next(_counter))
+
+
+class DeadlineBatcher:
+    def __init__(self, batch_size: int, min_feasible_latency: float = 0.0):
+        self.batch_size = batch_size
+        self.min_feasible_latency = min_feasible_latency
+        self._heap: list[tuple[float, int, Request]] = []
+        self.rejected: list[Request] = []
+
+    def submit(self, req: Request) -> None:
+        heapq.heappush(self._heap, (req.deadline, req.req_id, req))
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def next_batch(self, now: float) -> tuple[list[Request], float] | None:
+        """Pop up to batch_size requests (EDF).  Returns (batch, batch
+        deadline) or None if empty.  Requests already infeasible at ``now``
+        are rejected (fail-fast admission control)."""
+        batch: list[Request] = []
+        while self._heap and len(batch) < self.batch_size:
+            _, _, req = heapq.heappop(self._heap)
+            if req.deadline - now < self.min_feasible_latency:
+                self.rejected.append(req)
+                continue
+            batch.append(req)
+        if not batch:
+            return None
+        return batch, min(r.deadline for r in batch)

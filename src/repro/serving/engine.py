@@ -1,0 +1,110 @@
+"""Serving engine: batched prefill + KV-cached decode, with per-level
+compiled programs for anytime models.
+
+One compiled ``decode_step`` per (nesting level) — static shapes, so the
+controller can switch levels between requests at zero recompile cost after
+warmup.  The engine is mesh-agnostic: pass ``shardings`` built from
+launch/shardings.py to serve under pjit on a pod; on CPU (tests, examples)
+it runs single-device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import Model
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: Model
+    max_len: int
+    batch_size: int
+
+    def __post_init__(self):
+        cfg = self.model.cfg
+        self.levels = list(range(1, cfg.nest_levels + 1)) \
+            if cfg.nest_levels > 1 else [None]
+        self._prefill = {}
+        self._decode = {}
+        for lvl in self.levels:
+            self._prefill[lvl] = jax.jit(
+                lambda p, b, lvl=lvl: tfm.lm_apply(
+                    p, cfg, b["tokens"], mode="prefill", level=lvl,
+                    pos3d=b.get("pos3d")))
+            self._decode[lvl] = jax.jit(
+                lambda p, b, c, lvl=lvl: tfm.lm_apply(
+                    p, cfg, b["tokens"], mode="decode", caches=c,
+                    cache_len=b["cache_len"], level=lvl,
+                    pos3d=b.get("pos3d")))
+
+    def init_caches(self, level: int | None = None):
+        cfg = self.model.cfg
+        if cfg.nest_levels > 1 and level is not None:
+            # Level-k programs write level-k KV widths; size the buffers to
+            # the level (the controller fixes the level per request, so a
+            # request's cache stays consistent — DESIGN.md §5).
+            from repro.models.attention import head_stripe_specs
+            _, _, kv_spec = head_stripe_specs(cfg)
+            n_kv = kv_spec.width(level) // cfg.head_dim
+            lvl_cfg = cfg.replace(n_kv_heads=max(n_kv, 1))
+            return tfm.init_caches(lvl_cfg, self.batch_size, self.max_len)
+        return self.model.init_caches(self.batch_size, self.max_len)
+
+    def generate(self, params, prompt: np.ndarray, n_new: int,
+                 level: int | None = None,
+                 deadline_s: float | None = None) -> dict:
+        """Greedy-decode ``n_new`` tokens after ``prompt`` [B, S0].
+
+        Anytime semantics: when ``level`` is None and the model is nested,
+        runs at the deepest level; a deadline (wall-clock seconds) makes
+        generate return whatever tokens are complete at expiry (paper
+        Eq. 10 staircase measured for real).
+        """
+        t0 = time.perf_counter()
+        cfg = self.model.cfg
+        lvl = level if level is not None else \
+            (cfg.nest_levels if cfg.nest_levels > 1 else None)
+        b, s0 = prompt.shape
+        out = tfm.lm_apply(params, cfg, jnp.asarray(prompt),
+                           mode="prefill", level=lvl)
+        caches = self._merge(self.init_caches(lvl), out.caches)
+        logits = out.logits if not isinstance(out.logits, list) \
+            else out.logits[-1]
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        toks = [np.asarray(next_tok)]
+        for i in range(n_new - 1):
+            if deadline_s is not None and \
+                    time.perf_counter() - t0 > deadline_s:
+                break
+            step = {"tokens": next_tok,
+                    "cache_len": jnp.asarray(s0 + i, jnp.int32)}
+            o = self._decode[lvl](params, step, caches)
+            caches = o.caches
+            lg = o.logits if not isinstance(o.logits, list) else \
+                o.logits[-1]
+            next_tok = jnp.argmax(lg[:, -1:], axis=-1).astype(jnp.int32)
+            toks.append(np.asarray(next_tok))
+        return {
+            "tokens": np.concatenate(toks, axis=1),
+            "latency": time.perf_counter() - t0,
+            "level": lvl,
+            "complete": len(toks) == n_new,
+        }
+
+    @staticmethod
+    def _merge(buffers, prefill):
+        def merge(buf, pre):
+            buf, pre = jnp.asarray(buf), jnp.asarray(pre)
+            if buf.shape == pre.shape:
+                return pre
+            return jax.lax.dynamic_update_slice_in_dim(
+                buf, pre.astype(buf.dtype), 0, axis=buf.ndim - 3)
+        return jax.tree.map(merge, buffers, prefill)

@@ -1,0 +1,50 @@
+"""Training losses: cross-entropy (full and sequence-chunked) + anytime
+joint loss."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nesting import joint_anytime_loss  # re-export for trainers
+
+__all__ = ["cross_entropy", "chunked_cross_entropy", "token_accuracy",
+           "joint_anytime_loss"]
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token CE.  logits [B,S,V] (any float dtype), labels [B,S]."""
+    lse = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lse, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def chunked_cross_entropy(hidden: jax.Array, unembed: jax.Array,
+                          labels: jax.Array, chunk: int) -> jax.Array:
+    """CE without materialising [B,S,V] logits: scan over sequence chunks.
+
+    Memory high-water drops from B*S*V to B*chunk*V — the standard fix for
+    large-vocab models (gemma3 V=262k) where the logits tensor would
+    dominate the activation footprint.
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by loss chunk {chunk}")
+    n = s // chunk
+    h = hidden.reshape(b, n, chunk, d).swapaxes(0, 1)
+    y = labels.reshape(b, n, chunk).swapaxes(0, 1)
+
+    def body(acc, xs):
+        hc, yc = xs
+        logits = hc @ unembed
+        lse = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(lse, yc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(ll), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (h, y))
+    return -total / (b * s)
+
+
+def token_accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.argmax(logits, axis=-1) == labels)

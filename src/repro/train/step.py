@@ -1,0 +1,150 @@
+"""train_step factories: standard, microbatched (grad-accum), compressed,
+and anytime-joint (the paper's §4.3 training modes).
+
+Every factory returns a pure function suitable for ``jax.jit`` with
+explicit in/out shardings (see launch/shardings.py); nothing here touches
+device or mesh state.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.nesting import greedy_stage_weights, joint_anytime_loss
+from repro.models import transformer as tfm
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.compress import CompressionState, compress_grads
+from repro.train.losses import chunked_cross_entropy, cross_entropy
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: AdamWState
+    compress_state: CompressionState | None
+
+
+def make_loss_fn(model, cfg: ModelConfig):
+    def loss_fn(params, batch):
+        if cfg.loss_chunk and not cfg.encoder_layers and cfg.nest_levels == 1:
+            out = tfm.lm_apply(params, cfg, batch["tokens"],
+                               pos3d=batch.get("pos3d"), mode="train",
+                               return_hidden=True)
+            unembed = params.get("unembed")
+            if unembed is None:
+                unembed = params["embed"].T
+            ce = chunked_cross_entropy(out.logits, unembed,
+                                       batch["labels"], cfg.loss_chunk)
+            aux = out.aux_loss
+        else:
+            logits, aux = model.train_logits(params, batch)
+            ce = cross_entropy(logits, batch["labels"])
+        loss = ce + cfg.router_aux_weight * aux
+        return loss, {"ce": ce, "aux_loss": aux}
+    return loss_fn
+
+
+def make_anytime_loss_fn(model, cfg: ModelConfig,
+                         level_weights=None, greedy_stage: int = 0):
+    """Joint (weighted per-level) or greedy (one-hot stage) anytime loss —
+    paper §4.3.  All levels come from ONE forward pass (nesting property)."""
+    assert cfg.nest_levels > 1
+
+    def loss_fn(params, batch):
+        logits_per_level, aux = model.train_logits(params, batch,
+                                                   all_levels=True)
+        losses = [cross_entropy(l, batch["labels"])
+                  for l in logits_per_level]
+        weights = level_weights
+        if greedy_stage:
+            weights = greedy_stage_weights(greedy_stage, cfg.nest_levels)
+        loss = joint_anytime_loss(losses, weights) \
+            + cfg.router_aux_weight * aux
+        metrics = {"ce": losses[-1], "aux_loss": aux}
+        for i, l in enumerate(losses):
+            metrics[f"ce_level{i + 1}"] = l
+        return loss, metrics
+    return loss_fn
+
+
+def make_train_step(model, cfg: ModelConfig, opt: AdamW, *,
+                    microbatches: int = 1, compress: bool = False,
+                    loss_fn=None):
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    ``microbatches > 1`` splits the batch and accumulates gradients in a
+    ``lax.scan`` (sequential, constant memory).  ``compress=True`` applies
+    int8 + error-feedback compression to the gradient before the optimizer
+    (models the compressed DP all-reduce; see optim/compress.py).
+    """
+    loss_fn = loss_fn or make_loss_fn(model, cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+        b = batch["tokens"].shape[0]
+        if b % microbatches:
+            raise ValueError(f"batch {b} not divisible into "
+                             f"{microbatches} microbatches")
+        mb = b // microbatches
+        stacked = {k: (v.reshape(microbatches, mb, *v.shape[1:])
+                       if v.shape and v.shape[0] == b else v)
+                   for k, v in batch.items()}
+        # pos3d has batch on axis 1.
+        if "pos3d" in batch:
+            p = batch["pos3d"]
+            stacked["pos3d"] = p.reshape(3, microbatches, mb, *p.shape[2:]) \
+                                .swapaxes(0, 1)
+
+        zero_grads = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        sample = {k: v[0] for k, v in stacked.items()}
+        metrics_shape = jax.eval_shape(
+            lambda p, bt: grad_fn(p, bt)[0][1], params, sample)
+        zero_metrics = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), metrics_shape)
+
+        def body(acc, micro):
+            loss_acc, metrics_acc, grads_acc = acc
+            (loss, metrics), grads = grad_fn(params, micro)
+            grads_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                grads_acc, grads)
+            loss_acc = loss_acc + loss / microbatches
+            metrics_acc = jax.tree.map(
+                lambda a, m: a + m / microbatches, metrics_acc, metrics)
+            return (loss_acc, metrics_acc, grads_acc), None
+
+        (loss, metrics, grads), _ = jax.lax.scan(
+            body, (jnp.zeros(()), zero_metrics, zero_grads), stacked)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        loss, metrics, grads = compute_grads(state.params, batch)
+        comp_state = state.compress_state
+        if compress:
+            grads, comp_state, cmetrics = compress_grads(grads, comp_state)
+            metrics.update(cmetrics)
+        params, opt_state, ometrics = opt.update(grads, state.opt_state,
+                                                 state.params)
+        metrics.update(ometrics)
+        metrics["loss"] = loss
+        return TrainState(params, opt_state, comp_state), metrics
+
+    return train_step
+
+
+def init_train_state(model, cfg: ModelConfig, opt: AdamW, key,
+                     compress: bool = False) -> TrainState:
+    params = model.init(key)
+    opt_state = opt.init(params)
+    comp = None
+    if compress:
+        from repro.optim.compress import init_compression
+        comp = init_compression(params)
+    return TrainState(params, opt_state, comp)

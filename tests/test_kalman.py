@@ -1,0 +1,115 @@
+"""Unit + property tests for the ALERT Kalman filters (paper Eqs. 6, 8)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.kalman import IdlePowerFilter, ScalarKalman, SlowdownFilter
+
+
+class TestSlowdownFilter:
+    def test_initial_constants_match_paper(self):
+        f = SlowdownFilter()
+        assert f.mu == 1.0 and f.sigma == 0.1 and f.gain == 0.5
+        assert f.meas_noise == 1e-3 and f.process_noise_floor == 0.1
+        assert f.alpha == 0.3 and f.miss_inflation == 0.2
+
+    def test_converges_to_constant_slowdown(self):
+        f = SlowdownFilter()
+        for _ in range(200):
+            f.observe(observed_latency=1.8, profiled_latency=1.0)
+        assert abs(f.mu - 1.8) < 0.05
+
+    def test_tracks_step_change_within_few_inputs(self):
+        """Paper §3.2.5(2): reacts within ~one input to sudden changes."""
+        f = SlowdownFilter()
+        for _ in range(50):
+            f.observe(1.0, 1.0)
+        mu_before = f.mu
+        for _ in range(3):
+            f.observe(2.5, 1.0)  # contention starts
+        assert f.mu > mu_before + 0.5 * (2.5 - mu_before)
+
+    def test_sigma_grows_with_volatility(self):
+        rng = np.random.default_rng(0)
+        quiet, noisy = SlowdownFilter(), SlowdownFilter()
+        for _ in range(300):
+            quiet.observe(1.0 + 0.01 * rng.standard_normal(), 1.0)
+            noisy.observe(max(1.0 + 0.8 * rng.standard_normal(), 0.05), 1.0)
+        assert noisy.std > quiet.std
+
+    def test_miss_inflation_pushes_conservative(self):
+        f_hit, f_miss = SlowdownFilter(), SlowdownFilter()
+        for _ in range(20):
+            f_hit.observe(1.5, 1.0, deadline_missed=False)
+            f_miss.observe(1.5, 1.0, deadline_missed=True)
+        assert f_miss.mu > f_hit.mu
+        assert abs(f_miss.mu / f_hit.mu - 1.2) < 0.05  # the 0.2 factor
+
+    def test_predict_latency_scales_all_configs(self):
+        f = SlowdownFilter()
+        for _ in range(100):
+            f.observe(2.0, 1.0)
+        for t_train in (0.01, 0.5, 7.0):
+            mean, std = f.predict_latency(t_train)
+            assert abs(mean - f.mu * t_train) < 1e-12
+            assert abs(std - f.std * t_train) < 1e-12
+
+    def test_rejects_nonpositive_profile(self):
+        with pytest.raises(ValueError):
+            SlowdownFilter().observe(1.0, 0.0)
+
+    @given(st.floats(min_value=0.2, max_value=8.0),
+           st.integers(min_value=50, max_value=200))
+    @settings(max_examples=25, deadline=None)
+    def test_property_converges_to_any_constant_ratio(self, ratio, n):
+        f = SlowdownFilter()
+        for _ in range(n):
+            f.observe(ratio, 1.0)
+        assert abs(f.mu - ratio) / ratio < 0.12
+
+    @given(st.lists(st.floats(min_value=0.05, max_value=20.0),
+                    min_size=1, max_size=200))
+    @settings(max_examples=30, deadline=None)
+    def test_property_estimates_stay_finite_and_bounded(self, obs):
+        f = SlowdownFilter()
+        lo, hi = min(obs), max(obs)
+        for o in obs:
+            f.observe(o, 1.0)
+            assert math.isfinite(f.mu) and math.isfinite(f.sigma)
+            assert 0.0 < f.gain < 1.0
+        # mean stays within the convex hull of init and observations
+        assert min(lo, 1.0) - 1e-9 <= f.mu <= max(hi, 1.0) + 1e-9
+
+
+class TestIdlePowerFilter:
+    def test_converges_to_ratio(self):
+        f = IdlePowerFilter()
+        for _ in range(100):
+            f.observe(idle_power=30.0, active_power=120.0)
+        assert abs(f.phi - 0.25) < 0.01
+
+    def test_rejects_nonpositive_active(self):
+        with pytest.raises(ValueError):
+            IdlePowerFilter().observe(10.0, 0.0)
+
+    @given(st.floats(min_value=0.0, max_value=1.0))
+    @settings(max_examples=20, deadline=None)
+    def test_property_phi_in_unit_interval_for_valid_ratios(self, ratio):
+        f = IdlePowerFilter()
+        for _ in range(60):
+            f.observe(ratio * 100.0, 100.0)
+        assert -0.05 <= f.phi <= 1.05
+        assert abs(f.phi - ratio) < 0.05
+
+
+class TestScalarKalman:
+    def test_tracks_mean(self):
+        f = ScalarKalman()
+        for _ in range(100):
+            f.observe(3.0)
+        assert abs(f.mean - 3.0) < 0.05
+        assert f.std < 0.2

@@ -1,0 +1,86 @@
+"""MoE dispatch tests: one-hot (GShard) vs sort/gather (beyond-paper
+optimization) equivalence, capacity semantics, routing properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.models.moe import (capacity, moe, moe_gather, moe_init,
+                              route_topk)
+
+
+def make_cfg(e=8, k=2, cap=8.0, dispatch="onehot"):
+    return ModelConfig(name="m", family="moe", n_layers=1, d_model=32,
+                       n_heads=4, n_kv_heads=4, head_dim=8, d_ff=16,
+                       vocab=64, n_experts=e, top_k=k,
+                       capacity_factor=cap, dtype="float32",
+                       moe_dispatch=dispatch)
+
+
+class TestDispatchEquivalence:
+    @pytest.mark.parametrize("e,k", [(8, 2), (4, 1), (16, 4)])
+    def test_gather_matches_onehot_no_drops(self, e, k):
+        """With capacity large enough that nothing drops, the two dispatch
+        implementations must agree exactly (same experts, same gates)."""
+        cfg = make_cfg(e=e, k=k, cap=16.0)
+        params = moe_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+        y1, _ = moe(params, x, cfg)
+        y2, _ = moe_gather(params, x, cfg)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_gather_drops_overflow(self):
+        """Under tight capacity both paths drop; outputs stay finite and
+        dropped tokens pass through (residual handled by caller)."""
+        cfg = make_cfg(e=4, k=2, cap=0.5)
+        params = moe_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32))
+        for fn in (moe, moe_gather):
+            y, aux = fn(params, x, cfg)
+            assert np.isfinite(np.asarray(y)).all()
+            assert np.isfinite(float(aux))
+
+    def test_config_switch(self):
+        cfg = make_cfg(dispatch="gather")
+        params = moe_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 32))
+        y, _ = moe(params, x, cfg)   # routes through moe_gather
+        y2, _ = moe_gather(params, x, cfg)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y2),
+                                   rtol=1e-6)
+
+    def test_gather_differentiable(self):
+        cfg = make_cfg(e=4, k=2, dispatch="gather")
+        params = moe_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 32))
+
+        def loss(p):
+            y, aux = moe_gather(p, x, cfg)
+            return jnp.sum(y ** 2) + aux
+
+        g = jax.grad(loss)(params)
+        assert all(np.isfinite(np.asarray(l)).all()
+                   for l in jax.tree.leaves(g))
+        assert float(jnp.abs(g["w_gate"]).sum()) > 0
+
+
+class TestRouting:
+    def test_topk_gates_normalised(self):
+        logits = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+        vals, idx, probs = route_topk(logits, 2)
+        np.testing.assert_allclose(np.asarray(vals.sum(-1)), 1.0,
+                                   rtol=1e-6)
+        assert int(idx.max()) < 8
+
+    @given(st.integers(min_value=1, max_value=8),
+           st.integers(min_value=8, max_value=64))
+    @settings(max_examples=15, deadline=None)
+    def test_property_capacity_bounds(self, k, e):
+        c = capacity(256, k, e, 1.25)
+        assert c >= k
+        assert c >= 256 * k / e  # never below the balanced load

