@@ -1,0 +1,237 @@
+"""Scalar vs batched decision-loop benchmark + parity gate.
+
+Measures per-decision latency of the legacy scalar NumPy controller
+(:class:`repro.core.reference.ScalarReferenceController`, one stream per
+call) against the fused batched engine
+(:class:`repro.core.batched.BatchedAlertEngine`, S streams per call) at
+S in {1, 64, 1024, 8192}, and sweeps random profiles / goals / constraints
+asserting the two implementations pick IDENTICAL configurations with
+estimates within 1e-5.  Results land in ``BENCH_controller.json`` at the
+repo root so the perf trajectory is recorded across PRs (DESIGN.md §6).
+
+    PYTHONPATH=src python benchmarks/controller_bench.py [--quick]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core.batched import BatchedAlertEngine, RELAXED_NAMES
+from repro.core.controller import Constraints, Goal
+from repro.core.power import PowerModel
+from repro.core.profiles import Candidate, ProfileTable
+from repro.core.reference import ScalarReferenceController
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_OUT = os.path.join(_ROOT, "BENCH_controller.json")
+if _ROOT not in sys.path:  # allow `python benchmarks/controller_bench.py`
+    sys.path.insert(0, _ROOT)
+
+
+# ------------------------------------------------------------------ #
+# random workloads                                                   #
+# ------------------------------------------------------------------ #
+def random_table(rng: np.random.Generator) -> ProfileTable:
+    """Random traditional family + optional anytime group, valid staircase
+    (level latencies/accuracies increasing within the group)."""
+    k_trad = int(rng.integers(2, 6))
+    n_any = int(rng.integers(0, 5))
+    n_power = int(rng.integers(2, 9))
+    pm = PowerModel(p_idle=float(rng.uniform(20, 80)),
+                    p_tdp=float(rng.uniform(120, 260)))
+    caps = pm.buckets(n_power)
+    cands, base = [], []
+    accs = np.sort(rng.uniform(0.4, 0.95, k_trad))
+    lats = np.sort(rng.uniform(0.002, 0.5, k_trad))
+    for t in range(k_trad):
+        cands.append(Candidate(f"trad{t}", 1e9, 1e8, float(accs[t])))
+        base.append(lats[t])
+    if n_any:
+        a_accs = np.sort(rng.uniform(0.4, 0.95, n_any))
+        a_lats = np.sort(rng.uniform(0.002, 0.6, n_any))
+        for m in range(n_any):
+            cands.append(Candidate(f"any-l{m+1}", 1e9, 1e8,
+                                   float(a_accs[m]), True, "g", m + 1))
+            base.append(a_lats[m])
+    base = np.asarray(base)
+    lat = np.zeros((len(cands), n_power))
+    pw = np.zeros_like(lat)
+    for j, cap in enumerate(caps):
+        f = pm.speed_fraction(cap)
+        lat[:, j] = base / f
+        pw[:, j] = pm.power_at_fraction(f)
+    return ProfileTable(cands, caps, lat, pw,
+                        q_fail=float(rng.uniform(0.0, 0.2)))
+
+
+def random_state(rng: np.random.Generator, s: int):
+    return (rng.uniform(0.6, 2.5, s), rng.uniform(0.01, 0.4, s),
+            rng.uniform(0.05, 0.6, s))
+
+
+# ------------------------------------------------------------------ #
+# parity sweep                                                       #
+# ------------------------------------------------------------------ #
+def parity_sweep(n_tables: int = 12, n_streams: int = 16,
+                 seed: int = 0) -> dict:
+    """Random profiles x goals x constraints: batched picks must equal the
+    scalar reference exactly; estimates must agree within 1e-5."""
+    rng = np.random.default_rng(seed)
+    checked = mismatches = 0
+    max_est_diff = 0.0
+    for _ in range(n_tables):
+        table = random_table(rng)
+        med_lat = float(np.median(table.latency))
+        med_en = float(np.median(table.run_power * med_lat))
+        for goal in (Goal.MINIMIZE_ENERGY, Goal.MAXIMIZE_ACCURACY):
+            overhead = float(rng.uniform(0, 0.2) * med_lat)
+            engine = BatchedAlertEngine(table, goal, overhead=overhead)
+            mus, sds, phis = random_state(rng, n_streams)
+            deadlines = rng.uniform(0.2, 3.0, n_streams) * med_lat
+            # include infeasible constraints to exercise relaxation
+            if goal is Goal.MINIMIZE_ENERGY:
+                goals = rng.uniform(0.3, 1.05, n_streams)
+            else:
+                goals = rng.uniform(0.0, 2.5, n_streams) * med_en
+            kw = {"accuracy_goal" if goal is Goal.MINIMIZE_ENERGY
+                  else "energy_goal": goals}
+            batch = engine.select(mus, sds, phis, deadlines, **kw)
+            est = engine.estimate(mus, sds, phis,
+                                  np.maximum(deadlines - overhead, 1e-9))
+            for s in range(n_streams):
+                ref = ScalarReferenceController(table, goal,
+                                                overhead=overhead)
+                ref.slowdown.mu = float(mus[s])
+                ref.slowdown.sigma = float(sds[s])
+                ref.idle_power.phi = float(phis[s])
+                c_kw = {"accuracy_goal" if goal is Goal.MINIMIZE_ENERGY
+                        else "energy_goal": float(goals[s])}
+                d = ref.select(Constraints(deadline=float(deadlines[s]),
+                                           **c_kw))
+                checked += 1
+                same = (d.model_index == int(batch.model_index[s])
+                        and d.power_index == int(batch.power_index[s])
+                        and d.feasible == bool(batch.feasible[s])
+                        and d.relaxed == RELAXED_NAMES[
+                            int(batch.relaxed_code[s])])
+                mismatches += not same
+                e = ref.estimate(max(float(deadlines[s]) - overhead, 1e-9))
+                for a, b in ((est.accuracy[s], e.accuracy),
+                             (est.energy[s], e.energy),
+                             (est.lat_mean[s], e.lat_mean)):
+                    scale = max(1.0, float(np.abs(b).max()))
+                    max_est_diff = max(max_est_diff,
+                                       float(np.abs(a - b).max()) / scale)
+    return {"decisions_checked": checked, "decision_mismatches": mismatches,
+            "max_estimate_rel_diff": max_est_diff,
+            "decisions_identical": mismatches == 0,
+            "estimates_within_1e5": max_est_diff < 1e-5}
+
+
+# ------------------------------------------------------------------ #
+# throughput                                                          #
+# ------------------------------------------------------------------ #
+def bench_throughput(sizes, seed: int = 1, scalar_iters: int = 128,
+                     reps: int = 40, scalar_reps: int = 8) -> list[dict]:
+    """Best-of-reps on BOTH sides (min is the standard noise-robust
+    estimator; it favours the scalar baseline equally)."""
+    from benchmarks.common import family_table, deadline_range
+
+    table = family_table("image")
+    dls = deadline_range(table, 5)
+    rng = np.random.default_rng(seed)
+    rows = []
+    for s in sizes:
+        mus, sds, phis = random_state(rng, s)
+        deadlines = rng.choice(dls, s)
+        goals = rng.uniform(0.6, 0.9, s)
+        engine = BatchedAlertEngine(table, Goal.MINIMIZE_ENERGY)
+        engine.select(mus, sds, phis, deadlines, accuracy_goal=goals)
+        t_best = np.inf
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            engine.select(mus, sds, phis, deadlines, accuracy_goal=goals)
+            t_best = min(t_best, time.perf_counter() - t0)
+        batched_dps = s / t_best
+
+        n_sc = min(s, scalar_iters)
+        ref = ScalarReferenceController(table, Goal.MINIMIZE_ENERGY)
+        cons = [Constraints(deadline=float(deadlines[i % s]),
+                            accuracy_goal=float(goals[i % s]))
+                for i in range(n_sc)]
+        ref.select(cons[0])
+        t_sc = np.inf
+        for _ in range(scalar_reps):
+            t0 = time.perf_counter()
+            for c in cons:
+                ref.select(c)
+            t_sc = min(t_sc, (time.perf_counter() - t0) / n_sc)
+        scalar_dps = 1.0 / t_sc
+        rows.append({
+            "n_streams": s,
+            "batched_us_per_decision": t_best / s * 1e6,
+            "scalar_us_per_decision": t_sc * 1e6,
+            "batched_decisions_per_sec": batched_dps,
+            "scalar_decisions_per_sec": scalar_dps,
+            "speedup": batched_dps / scalar_dps,
+        })
+    return rows
+
+
+def run(quick: bool = False) -> dict:
+    sizes = [1, 64, 1024] if quick else [1, 64, 1024, 8192]
+    parity = parity_sweep(n_tables=6 if quick else 12,
+                          n_streams=8 if quick else 16)
+    rows = bench_throughput(sizes)
+    by_s = {r["n_streams"]: r for r in rows}
+    out = {
+        "bench": "controller_scoring",
+        "quick": quick,
+        "parity": parity,
+        "throughput": rows,
+        "speedup_at_1024": by_s[1024]["speedup"],
+    }
+    out["checks"] = {
+        "parity_decisions_identical": parity["decisions_identical"],
+        "parity_estimates_within_1e5": parity["estimates_within_1e5"],
+        "speedup_at_1024_ge_50x": by_s[1024]["speedup"] >= 50.0,
+    }
+    with open(_OUT, "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+def main() -> list[tuple]:
+    quick = "--quick" in sys.argv
+    t0 = time.time()
+    out = run(quick=quick)
+    p = out["parity"]
+    print(f"  parity: {p['decisions_checked']} decisions, "
+          f"{p['decision_mismatches']} mismatches, "
+          f"max est diff {p['max_estimate_rel_diff']:.2e}")
+    for r in out["throughput"]:
+        print(f"  S={r['n_streams']:>5}: batched "
+              f"{r['batched_us_per_decision']:8.2f} us/dec "
+              f"({r['batched_decisions_per_sec']:,.0f}/s)  scalar "
+              f"{r['scalar_us_per_decision']:8.2f} us/dec  "
+              f"speedup {r['speedup']:8.1f}x")
+    failed = [k for k, v in out["checks"].items() if not v]
+    print("claim checks:", "ALL PASS" if not failed else f"FAIL: {failed}")
+    print(f"  wrote {_OUT} ({time.time() - t0:.0f}s)")
+    assert not failed, f"controller_bench checks failed: {failed}"
+    rows = [(f"controller_batched_s{r['n_streams']}",
+             r["batched_us_per_decision"],
+             f"speedup={r['speedup']:.1f}x") for r in out["throughput"]]
+    rows.append(("controller_scalar_ref",
+                 out["throughput"][0]["scalar_us_per_decision"],
+                 f"parity_mismatches={p['decision_mismatches']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -14,10 +14,11 @@ import time
 
 def main() -> None:
     quick = "--quick" in sys.argv
-    from benchmarks import (anytime_tradeoff, case_study, kernel_bench,
-                            latency_variance, roofline_report, table4_grid,
-                            tradeoff_frontier)
+    from benchmarks import (anytime_tradeoff, case_study, controller_bench,
+                            kernel_bench, latency_variance, roofline_report,
+                            table4_grid, tradeoff_frontier)
     suite = [
+        ("Controller scoring engine", controller_bench),
         ("Fig2/3 latency variance", latency_variance),
         ("Fig4 tradeoff frontier", tradeoff_frontier),
         ("Table4 scheme grid", table4_grid),

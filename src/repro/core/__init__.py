@@ -1,8 +1,12 @@
 """ALERT core: runtime controller (paper §3) + anytime nesting (paper §4)."""
 
+from repro.core.batched import (BatchedAlertEngine, DecisionBatch,
+                                EstimateBatch, WindowedGoalBank)
 from repro.core.controller import (AlertController, Constraints, Decision,
                                    Goal)
-from repro.core.kalman import IdlePowerFilter, ScalarKalman, SlowdownFilter
+from repro.core.kalman import (IdlePowerFilter, IdlePowerFilterBank,
+                               ScalarKalman, SlowdownFilter,
+                               SlowdownFilterBank)
 from repro.core.nesting import (DepthSpec, StripeSpec, block_triangular_mask,
                                 depth_nested_apply, joint_anytime_loss,
                                 nested_linear, nested_norm_linear,
@@ -12,8 +16,10 @@ from repro.core.profiles import (Candidate, ProfileTable,
                                  profile_from_roofline, profile_measured)
 
 __all__ = [
-    "AlertController", "Constraints", "Decision", "Goal",
-    "IdlePowerFilter", "ScalarKalman", "SlowdownFilter",
+    "AlertController", "BatchedAlertEngine", "Constraints", "Decision",
+    "DecisionBatch", "EstimateBatch", "Goal", "WindowedGoalBank",
+    "IdlePowerFilter", "IdlePowerFilterBank", "ScalarKalman",
+    "SlowdownFilter", "SlowdownFilterBank",
     "DepthSpec", "StripeSpec", "block_triangular_mask", "depth_nested_apply",
     "joint_anytime_loss", "nested_linear", "nested_norm_linear",
     "prefix_rmsnorm", "PowerModel", "predict_energy",

@@ -1,0 +1,359 @@
+"""Fleet-scale batched scoring engine for the ALERT decision loop.
+
+The paper's per-input hot path (Section 3.2: estimation Eq. 7/9/10 +
+selection Eq. 4/5 with Section 3.3 relaxation) is evaluated here for
+**S streams x K models x L power buckets in one jit-compiled pass**:
+
+* Filter state arrives as struct-of-arrays vectors (``mu``, ``sigma``,
+  ``phi`` — from the :mod:`repro.core.kalman` filter banks or from a
+  single stream's scalar filters).
+* The anytime staircases are precomputed at ProfileTable build time: the
+  padded ``[K, M, L]`` level-latency tensor + ``[K, M]`` accuracy/validity
+  masks (:meth:`ProfileTable.staircase_tensors`, used for vectorised
+  delivery in the fleet sim) and — for scoring — their telescoped form, a
+  ``[K, K]`` staircase weight matrix that turns Eq. 7 and Eq. 10 into ONE
+  branch-free ``jnp`` expression: erf once per (stream, candidate, power
+  bucket) via ``jax.scipy.special``, then a tiny matrix contraction.  No
+  ``np.vectorize``, no per-candidate Python loop, no padded level axis in
+  the hot pass.  A traditional model is simply a 1-level staircase, for
+  which Eq. 10 reduces exactly to Eq. 7.
+* Selection is a masked argmin/argmax over the ``[S, K, L]`` grid with the
+  paper's relaxation priority (latency > accuracy > power) folded in as a
+  branch-free ``where`` between the feasible pick and the relaxed pick.
+
+Numerics: scoring runs in float64 under jax's *scoped* ``enable_x64`` (the
+global flag is never touched), which makes the engine's decisions
+bit-identical to the float64 NumPy reference (:mod:`repro.core.reference`)
+across the parity sweep in ``benchmarks/controller_bench.py``.
+
+``AlertController`` is a thin S=1 wrapper over this engine;
+``repro.serving.sim.FleetSim`` and ``repro.serving.alert_server`` drive
+thousands of streams per tick through one :meth:`BatchedAlertEngine.select`
+call.  Tensor layout details: DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.core.profiles import ProfileTable
+
+_SQRT2 = math.sqrt(2.0)
+_INV_SQRT_2PI = 1.0 / math.sqrt(2.0 * math.pi)
+
+# Relaxation codes (Section 3.3) — returned per stream by select().
+RELAXED_NONE = 0        # a cell satisfied every constraint
+RELAXED_ACCURACY = 1    # min-energy task: accuracy goal unreachable
+RELAXED_POWER = 2       # max-accuracy task: energy budget unreachable
+RELAXED_NAMES = {RELAXED_NONE: "", RELAXED_ACCURACY: "accuracy",
+                 RELAXED_POWER: "power"}
+
+
+def _row_argmin(x):
+    """First-occurrence argmin along the last axis.
+
+    Same semantics as ``jnp.argmin`` (ties -> lowest index), but built from
+    vectorised min + mask arithmetic: XLA CPU lowers variadic argmin/argmax
+    reduces to scalar loops, which at [S, K*L] costs ~10x the whole
+    estimation pass.  This formulation is a plain reduce + elementwise ops.
+    """
+    c = x.shape[-1]
+    mask = x == jnp.min(x, axis=-1, keepdims=True)
+    return c - jnp.max(mask * (c - jnp.arange(c)), axis=-1)
+
+
+def _row_argmax(x):
+    """First-occurrence argmax along the last axis (see ``_row_argmin``)."""
+    c = x.shape[-1]
+    mask = x == jnp.max(x, axis=-1, keepdims=True)
+    return c - jnp.max(mask * (c - jnp.arange(c)), axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class EstimateBatch:
+    """Per-cell predictions for S streams: all arrays are ``[S, K, L]``."""
+
+    lat_mean: np.ndarray
+    lat_std: np.ndarray
+    accuracy: np.ndarray
+    energy: np.ndarray
+    p_finish: np.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class DecisionBatch:
+    """One selection round for S streams: all arrays are ``[S]``."""
+
+    model_index: np.ndarray        # int
+    power_index: np.ndarray        # int
+    predicted_latency: np.ndarray
+    predicted_accuracy: np.ndarray
+    predicted_energy: np.ndarray
+    feasible: np.ndarray           # bool
+    relaxed_code: np.ndarray       # int, see RELAXED_*
+
+    def __len__(self) -> int:
+        return int(self.model_index.shape[0])
+
+    def relaxed_name(self, s: int) -> str:
+        return RELAXED_NAMES[int(self.relaxed_code[s])]
+
+
+class BatchedAlertEngine:
+    """Stateless batched estimation + selection over a ProfileTable.
+
+    The engine owns no filter state — callers pass ``mu``/``sigma``/``phi``
+    vectors each round (banks for fleets, scalar filters for S=1), which
+    keeps the jit cache stable: for a fixed S every call dispatches to the
+    same compiled executable; nothing in the hot path re-traces.
+
+    Parameters mirror :class:`repro.core.controller.AlertController`:
+    ``goal`` picks Eq. 4 vs Eq. 5, ``overhead`` is subtracted from each
+    stream's deadline inside :meth:`select` (Section 3.2.1 step 2), and
+    ``paper_faithful_energy`` switches Eq. 9 verbatim vs the beyond-paper
+    E[min(t, T)] estimator.
+    """
+
+    def __init__(self, table: ProfileTable, goal, *,
+                 overhead: float = 0.0,
+                 paper_faithful_energy: bool = True):
+        from repro.core.controller import Goal  # avoid import cycle
+
+        self.table = table
+        self.goal = goal
+        self.overhead = float(overhead)
+        self.paper_faithful_energy = bool(paper_faithful_energy)
+        self._minimize_energy = goal is Goal.MINIMIZE_ENERGY
+
+        k, l = table.latency.shape
+        self._k, self._l = k, l
+        # Constants baked into the traced graphs (float64 under scoped x64).
+        self._c_latency = np.asarray(table.latency, np.float64)
+        self._c_run_power = np.asarray(table.run_power, np.float64)
+        self._c_q_fail = float(table.q_fail)
+        self._c_weights = self._staircase_weight_matrix(table)
+
+        self._estimate_jit = jax.jit(self._estimate_impl)
+        self._select_jit = jax.jit(self._select_impl)
+
+    @staticmethod
+    def _staircase_weight_matrix(table: ProfileTable) -> np.ndarray:
+        """Fold Eq. 7 + Eq. 10 into one [K, K] weight matrix ``P``.
+
+        Every staircase level of candidate k is itself a candidate row u
+        (traditional models are 1-level staircases), so with
+        ``F[s, u, l] = P(t_u <= T)`` — the per-candidate finish CDF — the
+        telescoped Eq. 10 sum becomes
+
+            q_hat[s, k, l] = q_fail + sum_u P[k, u] * F[s, u, l],
+
+        with ``P[k, r_m] = q_m - q_{m-1}`` along k's level prefix
+        (``q_0 = q_fail``).  For a traditional model this collapses to
+        ``P[k, k] = q_k - q_fail``, i.e. Eq. 7 verbatim.  Estimation then
+        needs exactly ONE erf evaluation per (stream, candidate, bucket)
+        plus a tiny K x K contraction — no padded level axis at all.
+        """
+        k = len(table.candidates)
+        weights = np.zeros((k, k), dtype=np.float64)
+        for i, r in table.staircase_rows().items():
+            prev = float(table.q_fail)
+            for u in r:
+                q_u = float(table.candidates[u].accuracy)
+                weights[i, u] += q_u - prev
+                prev = q_u
+        return weights
+
+    # ------------------------------------------------------------------ #
+    # traced implementations                                             #
+    # ------------------------------------------------------------------ #
+    def _estimate_impl(self, mu, sd, phi, deadline):
+        """[S] state vectors -> per-cell [S, K, L] predictions."""
+        lat = self._c_latency[None, :, :]                # [1, K, L]
+        t = deadline[:, None, None]                      # [S, 1, 1]
+        mu_ = mu[:, None, None]
+        sd_ = sd[:, None, None]
+
+        # Full-candidate latency (Idea 1: t = xi * t_train).
+        lat_mean = mu_ * lat                             # [S, K, L]
+        lat_std = jnp.maximum(sd_ * lat, 1e-12)
+        z = (t - lat_mean) / lat_std
+
+        # Eq. 7 + Eq. 10 in one branch-free expression: the finish CDF of
+        # every candidate (the only erf in the pass), contracted with the
+        # precomputed staircase weight matrix (see
+        # ``_staircase_weight_matrix``).  The deepest level of k's
+        # staircase is k itself, so p_finish IS the CDF grid.
+        f = 0.5 * (1.0 + jax.scipy.special.erf(z / _SQRT2))
+        accuracy = self._c_q_fail + jnp.einsum(
+            "ku,sul->skl", self._c_weights, f)
+        p_finish = f
+
+        # Energy, Eq. 9: run phase capped at the deadline (a missed input
+        # is abandoned at T_goal, Section 3.3); idle phase draws phi * p.
+        caps = self._c_run_power[None, :, :]
+        if self.paper_faithful_energy:
+            t_run = jnp.minimum(lat_mean, t)
+        else:
+            pdf = jnp.exp(-0.5 * z ** 2) * _INV_SQRT_2PI
+            t_run = (lat_mean * p_finish + t * (1.0 - p_finish)
+                     - lat_std * pdf)
+            t_run = jnp.clip(t_run, 0.0, t)
+        phi_ = phi[:, None, None]
+        energy = caps * t_run + phi_ * caps * jnp.maximum(t - t_run, 0.0)
+        return lat_mean, lat_std, accuracy, energy, p_finish
+
+    def _select_impl(self, mu, sd, phi, deadline, goal_val):
+        """Fused estimate + Eq. 4/5 pick with Section 3.3 relaxation."""
+        t_eff = jnp.maximum(deadline - self.overhead, 1e-9)
+        lat_mean, lat_std, acc, energy, p_fin = self._estimate_impl(
+            mu, sd, phi, t_eff)
+        s = acc.shape[0]
+        kl = self._k * self._l
+        acc_f = acc.reshape(s, kl)
+        en_f = energy.reshape(s, kl)
+
+        if self._minimize_energy:
+            # Eq. 4: argmin e s.t. q_hat >= Q_goal.  The latency constraint
+            # is folded into q_hat (a high miss probability drags expected
+            # accuracy to q_fail).  Relaxation: sacrifice the accuracy goal
+            # but stay latency-aware via argmax expected accuracy.
+            feas = acc_f >= goal_val[:, None]
+            any_f = feas.any(axis=1)
+            pick_f = _row_argmin(jnp.where(feas, en_f, jnp.inf))
+            pick_r = _row_argmax(acc_f)
+            relaxed = jnp.where(any_f, RELAXED_NONE, RELAXED_ACCURACY)
+        else:
+            # Eq. 5: argmax q_hat s.t. e <= E_goal; equal-accuracy cells
+            # tie-break to lower energy.  Power/energy is the lowest-
+            # priority constraint — relaxation drops it first.
+            feas = en_f <= goal_val[:, None]
+            any_f = feas.any(axis=1)
+            acc_m = jnp.where(feas, acc_f, -jnp.inf)
+            best = acc_m.max(axis=1, keepdims=True)
+            tie = jnp.where(jnp.isclose(acc_m, best, rtol=0.0, atol=1e-12),
+                            en_f, jnp.inf)
+            pick_f = _row_argmin(tie)
+            best_r = acc_f.max(axis=1, keepdims=True)
+            tie_r = jnp.where(
+                jnp.isclose(acc_f, best_r, rtol=0.0, atol=1e-12),
+                en_f, jnp.inf)
+            pick_r = _row_argmin(tie_r)
+            relaxed = jnp.where(any_f, RELAXED_NONE, RELAXED_POWER)
+
+        pick = jnp.where(any_f, pick_f, pick_r)
+        # One-hot gathers (XLA CPU gathers are row-by-row; this is one
+        # elementwise mul + reduce).
+        onehot = jnp.arange(kl) == pick[:, None]
+        gather = lambda a: jnp.sum(a.reshape(s, kl) * onehot, axis=1)
+        return (pick // self._l, pick % self._l, gather(lat_mean),
+                gather(acc), gather(energy), any_f, relaxed)
+
+    # ------------------------------------------------------------------ #
+    # public API (numpy in, numpy out; float64 via scoped x64)           #
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _vec(x, s: int) -> np.ndarray:
+        a = np.asarray(x, np.float64)
+        return np.broadcast_to(a, (s,)) if a.ndim == 0 else a
+
+    def estimate(self, mu, sigma, phi, deadline) -> EstimateBatch:
+        """Score every (stream, model, power) cell.
+
+        ``deadline`` is the effective deadline (overhead already applied by
+        the caller, matching ``AlertController.estimate``); scalars
+        broadcast across streams.
+        """
+        t = np.asarray(deadline, np.float64)
+        s = t.shape[0] if t.ndim else 1
+        t = self._vec(t, s)
+        with enable_x64():
+            out = self._estimate_jit(
+                self._vec(mu, s), np.maximum(self._vec(sigma, s), 1e-6),
+                self._vec(phi, s), t)
+        return EstimateBatch(*(np.asarray(o) for o in out))
+
+    def select(self, mu, sigma, phi, deadline, *,
+               accuracy_goal=None, energy_goal=None) -> DecisionBatch:
+        """One decision per stream (Eq. 4 or Eq. 5 per the engine's goal).
+
+        ``deadline`` is the raw per-stream T_goal; the engine subtracts its
+        configured ``overhead`` (Section 3.2.1 step 2).  Min-energy engines
+        need ``accuracy_goal`` (per-stream effective Q_goal, e.g. from the
+        windowed-goal bank); max-accuracy engines need ``energy_goal``.
+        """
+        t = np.asarray(deadline, np.float64)
+        s = t.shape[0] if t.ndim else 1
+        goal_val = accuracy_goal if self._minimize_energy else energy_goal
+        if goal_val is None:
+            need = "accuracy_goal" if self._minimize_energy else \
+                "energy_goal"
+            raise ValueError(f"{self.goal} task needs {need}")
+        with enable_x64():
+            out = self._select_jit(
+                self._vec(mu, s), np.maximum(self._vec(sigma, s), 1e-6),
+                self._vec(phi, s), self._vec(t, s), self._vec(goal_val, s))
+        i, j, lat, acc, en, feas, relaxed = (np.asarray(o) for o in out)
+        return DecisionBatch(model_index=i, power_index=j,
+                             predicted_latency=lat, predicted_accuracy=acc,
+                             predicted_energy=en, feasible=feas,
+                             relaxed_code=relaxed)
+
+    def n_compiles(self) -> tuple[int, int]:
+        """(estimate, select) jit-cache sizes — 1 each means every call
+        after warmup reused the compiled executable (no re-tracing)."""
+        return (self._estimate_jit._cache_size(),
+                self._select_jit._cache_size())
+
+
+class WindowedGoalBank:
+    """Vectorised :class:`~repro.core.controller.WindowedAccuracyGoal`:
+    per-stream ring buffers of the last N-1 delivered accuracies (paper
+    fn.3) with the same compensation rule as the scalar class.  ``goal``
+    may be a scalar (shared Q_goal) or an [S] vector (per-stream goals);
+    :meth:`set_goals` resets exactly the streams whose goal changed,
+    mirroring the scalar class's recreate-on-change semantics per lane."""
+
+    def __init__(self, goal, n_streams: int, window: int = 10):
+        self.goal = np.broadcast_to(
+            np.asarray(goal, dtype=np.float64), (n_streams,)).copy()
+        self.window = int(window)
+        self._depth = max(self.window - 1, 0)
+        self._buf = np.zeros((n_streams, max(self._depth, 1)))
+        self._count = np.zeros(n_streams, dtype=np.int64)
+        self._pos = np.zeros(n_streams, dtype=np.int64)
+
+    def set_goals(self, goals) -> None:
+        new = np.broadcast_to(np.asarray(goals, dtype=np.float64),
+                              self.goal.shape)
+        changed = new != self.goal
+        if changed.any():
+            self._buf[changed] = 0.0
+            self._count[changed] = 0
+            self._pos[changed] = 0
+            self.goal = np.where(changed, new, self.goal)
+
+    def record(self, delivered: np.ndarray,
+               mask: np.ndarray | None = None) -> None:
+        if self._depth == 0:
+            return
+        s = self._buf.shape[0]
+        m = np.ones(s, bool) if mask is None else np.asarray(mask, bool)
+        rows = np.nonzero(m)[0]
+        self._buf[rows, self._pos[rows]] = np.asarray(delivered)[rows]
+        self._pos[rows] = (self._pos[rows] + 1) % self._depth
+        self._count[rows] = np.minimum(self._count[rows] + 1, self._depth)
+
+    def current_goal(self) -> np.ndarray:
+        if self._depth == 0:
+            return self.goal.copy()
+        total = self._buf.sum(axis=1)
+        need = self.goal * self.window - total
+        remaining = self.window - self._count
+        per_input = need - (remaining - 1) * self.goal
+        return np.where(self._count == 0, self.goal, per_input)

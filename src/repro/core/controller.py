@@ -14,7 +14,13 @@ Per input n the controller runs the paper's four steps (Section 3.2.1):
    constraints are relaxed in the paper's priority order: latency highest,
    then accuracy, then power (Section 3.3).
 
-The scoring math is vectorised over the (K models x L power buckets) grid.
+Scoring (estimation + selection) is delegated to the fleet-scale
+:class:`repro.core.batched.BatchedAlertEngine`: this class is the S=1
+wrapper that keeps the paper-shaped single-stream API (scalar Kalman
+filters, windowed accuracy goal, one ``Decision`` per input) while the
+grid math runs as one jit-compiled ``[S, K, L]`` pass.  The pre-engine
+NumPy implementation survives verbatim in :mod:`repro.core.reference` as
+the parity/benchmark baseline.
 """
 
 from __future__ import annotations
@@ -24,15 +30,17 @@ import enum
 import math
 
 import numpy as np
+from scipy.special import erf as _erf
 
 from repro.core.kalman import IdlePowerFilter, SlowdownFilter
 from repro.core.profiles import ProfileTable
 
 _SQRT2 = math.sqrt(2.0)
-_erf = np.vectorize(math.erf, otypes=[float])
 
 
 def normal_cdf(x: np.ndarray) -> np.ndarray:
+    """Vectorised standard-normal CDF (no ``np.vectorize``: scipy's ufunc
+    erf evaluates the whole grid in C)."""
     return 0.5 * (1.0 + _erf(np.asarray(x, dtype=float) / _SQRT2))
 
 
@@ -134,6 +142,8 @@ class AlertController:
                  kappa: float = 3.0, overhead: float = 0.0,
                  accuracy_window: int = 10,
                  paper_faithful_energy: bool = True):
+        from repro.core.batched import BatchedAlertEngine
+
         self.table = table
         self.goal = goal
         self.kappa = kappa
@@ -144,15 +154,12 @@ class AlertController:
         self._windowed_goal: WindowedAccuracyGoal | None = None
         self.accuracy_window = accuracy_window
         self._last_decision: Decision | None = None
-        # Precompute the anytime staircases: for candidate i (level m of a
-        # group) the train-latency of levels 1..m at each power bucket, and
-        # the level accuracies.
-        self._anytime_levels: dict[int, tuple[np.ndarray, np.ndarray]] = {}
-        for _, idxs in table.anytime_groups().items():
-            for pos, i in enumerate(idxs):
-                lvl_lat = table.latency[idxs[:pos + 1], :]      # [m, L]
-                lvl_acc = table.accuracies[idxs[:pos + 1]]       # [m]
-                self._anytime_levels[i] = (lvl_lat, lvl_acc)
+        # The batched engine precomputes the padded anytime staircases from
+        # the table and owns all grid scoring; this wrapper only keeps the
+        # per-stream state (filters, windowed goal, last decision).
+        self.engine = BatchedAlertEngine(
+            table, goal, overhead=overhead,
+            paper_faithful_energy=paper_faithful_energy)
 
     # ------------------------------------------------------------------ #
     # Step 1+3: measurement feedback                                      #
@@ -188,49 +195,18 @@ class AlertController:
     # Step 3: per-cell estimation                                         #
     # ------------------------------------------------------------------ #
     def estimate(self, deadline: float) -> _Estimates:
-        t_train = self.table.latency                      # [K, L]
-        mu, sd = self.slowdown.mu, self.slowdown.std
-        lat_mean = mu * t_train
-        lat_std = np.maximum(sd * t_train, 1e-12)
-        z = (deadline - lat_mean) / lat_std
-        p_finish = normal_cdf(z)
-
-        q = self.table.accuracies[:, None]                # [K, 1]
-        q_fail = self.table.q_fail
-        # Eq. 7 (traditional): expectation of the Eq. 3 step function.
-        accuracy = q_fail + (q - q_fail) * p_finish
-        # Eq. 10 (anytime staircase) overrides anytime candidates.
-        for i, (lvl_lat, lvl_acc) in self._anytime_levels.items():
-            lvl_mean = mu * lvl_lat                       # [m, L]
-            lvl_std = np.maximum(sd * lvl_lat, 1e-12)
-            f = normal_cdf((deadline - lvl_mean) / lvl_std)   # [m, L] P(t_k<=T)
-            f_next = np.vstack([f[1:], np.zeros((1, f.shape[1]))])
-            accuracy[i] = q_fail * (1.0 - f[0]) + (lvl_acc[:, None] *
-                                                   (f - f_next)).sum(axis=0)
-            p_finish[i] = f[-1]
-
-        # Energy, Eq. 9.  Run-phase time is capped at the deadline (a missed
-        # input is abandoned at T_goal, Section 3.3).
-        phi = self.idle_power.phi
-        caps = self.table.run_power                       # [K, L] actual draw
-        if self.paper_faithful_energy:
-            t_run = np.minimum(lat_mean, deadline)
-        else:
-            # Beyond-paper: E[min(t, T)] for t ~ N(lat_mean, lat_std^2).
-            pdf = np.exp(-0.5 * z ** 2) / math.sqrt(2 * math.pi)
-            t_run = lat_mean * p_finish + deadline * (1 - p_finish) \
-                - lat_std * pdf
-            t_run = np.clip(t_run, 0.0, deadline)
-        energy = caps * t_run + phi * caps * np.maximum(deadline - t_run, 0.0)
-        return _Estimates(lat_mean, lat_std, accuracy, energy, p_finish)
+        """One fused engine pass at S=1; returns the paper-shaped [K, L]
+        per-cell predictions (Eq. 7 / Eq. 9 / Eq. 10)."""
+        est = self.engine.estimate(
+            self.slowdown.mu, self.slowdown.sigma, self.idle_power.phi,
+            np.asarray([deadline]))
+        return _Estimates(est.lat_mean[0], est.lat_std[0],
+                          est.accuracy[0], est.energy[0], est.p_finish[0])
 
     # ------------------------------------------------------------------ #
     # Step 2+4: goal adjustment and selection                             #
     # ------------------------------------------------------------------ #
     def select(self, constraints: Constraints) -> Decision:
-        deadline = max(constraints.deadline - self.overhead, 1e-9)
-        est = self.estimate(deadline)
-
         q_goal = constraints.accuracy_goal
         if q_goal is not None:
             if self._windowed_goal is None or \
@@ -241,62 +217,22 @@ class AlertController:
         else:
             q_goal_eff = None
 
-        if self.goal is Goal.MINIMIZE_ENERGY:
-            decision = self._select_min_energy(est, q_goal_eff)
-        else:
-            decision = self._select_max_accuracy(est, constraints.energy_goal)
-        self._last_decision = decision
-        return decision
-
-    def _mk(self, est: _Estimates, i: int, j: int, feasible: bool,
-            relaxed: str) -> Decision:
-        return Decision(
+        # Eq. 4 / Eq. 5 + Section 3.3 relaxation, fused with estimation in
+        # one engine pass (the engine subtracts ``overhead`` from T_goal).
+        batch = self.engine.select(
+            self.slowdown.mu, self.slowdown.sigma, self.idle_power.phi,
+            np.asarray([constraints.deadline]),
+            accuracy_goal=q_goal_eff, energy_goal=constraints.energy_goal)
+        i = int(batch.model_index[0])
+        j = int(batch.power_index[0])
+        decision = Decision(
             model_index=i, power_index=j,
             model_name=self.table.candidates[i].name,
             power_cap=float(self.table.power_caps[j]),
-            predicted_latency=float(est.lat_mean[i, j]),
-            predicted_accuracy=float(est.accuracy[i, j]),
-            predicted_energy=float(est.energy[i, j]),
-            feasible=feasible, relaxed=relaxed)
-
-    def _select_min_energy(self, est: _Estimates,
-                           q_goal: float | None) -> Decision:
-        """Eq. 4: argmin e  s.t.  q_hat[T_goal] >= Q_goal.
-
-        The latency constraint is already folded into q_hat — a cell whose
-        deadline-miss probability is too high cannot reach Q_goal because a
-        miss delivers q_fail (Eq. 3).
-        """
-        assert q_goal is not None, "minimize-energy task needs accuracy_goal"
-        feasible = est.accuracy >= q_goal
-        if feasible.any():
-            energy = np.where(feasible, est.energy, np.inf)
-            i, j = np.unravel_index(int(np.argmin(energy)), energy.shape)
-            return self._mk(est, i, j, True, "")
-        # Relaxation (Section 3.3): latency > accuracy > power.  Energy is
-        # the objective here so "power" has nothing to give; sacrifice the
-        # accuracy *goal* but stay latency-aware by maximising expected
-        # accuracy (which embeds the deadline).
-        i, j = np.unravel_index(int(np.argmax(est.accuracy)),
-                                est.accuracy.shape)
-        return self._mk(est, i, j, False, "accuracy")
-
-    def _select_max_accuracy(self, est: _Estimates,
-                             e_goal: float | None) -> Decision:
-        """Eq. 5: argmax q_hat[T_goal]  s.t.  predicted energy <= E_goal."""
-        assert e_goal is not None, "maximize-accuracy task needs energy_goal"
-        feasible = est.energy <= e_goal
-        if feasible.any():
-            acc = np.where(feasible, est.accuracy, -np.inf)
-            best = acc.max()
-            # Tie-break equal-accuracy cells by lower energy.
-            tie = np.where(np.isclose(acc, best, rtol=0, atol=1e-12),
-                           est.energy, np.inf)
-            i, j = np.unravel_index(int(np.argmin(tie)), tie.shape)
-            return self._mk(est, i, j, True, "")
-        # Power/energy is the lowest-priority constraint — drop it first.
-        best = est.accuracy.max()
-        tie = np.where(np.isclose(est.accuracy, best, rtol=0, atol=1e-12),
-                       est.energy, np.inf)
-        i, j = np.unravel_index(int(np.argmin(tie)), tie.shape)
-        return self._mk(est, i, j, False, "power")
+            predicted_latency=float(batch.predicted_latency[0]),
+            predicted_accuracy=float(batch.predicted_accuracy[0]),
+            predicted_energy=float(batch.predicted_energy[0]),
+            feasible=bool(batch.feasible[0]),
+            relaxed=batch.relaxed_name(0))
+        self._last_decision = decision
+        return decision

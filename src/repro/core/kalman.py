@@ -15,17 +15,22 @@ Two filters:
   (idle power / active power under the current cap), Eq. 8.  Used by the
   energy predictor (Eq. 9).
 
-Both are tiny scalar filters; they are written in plain Python/NumPy scalars
-on purpose — they sit on the host control path (one update per input batch),
-never inside a jit region, and the paper measures their overhead at 0.6-1.7 %
-of input processing time.  A vectorised jnp scoring path lives in
-``controller.py``.
+The scalar filters sit on the host control path of a single stream (one
+update per input) and stay plain Python on purpose.  For fleet-scale serving
+(S streams advanced in lockstep) :class:`SlowdownFilterBank` and
+:class:`IdlePowerFilterBank` hold the same state as struct-of-arrays
+``[S]``-shaped vectors and apply the identical recurrences to every stream
+in one fused, jit-compiled update — the per-stream math is bit-for-bit the
+scalar filters'.  The batched scoring path that consumes the bank state
+lives in ``repro.core.batched``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -122,6 +127,137 @@ class IdlePowerFilter:
         self.variance = (1.0 - gain) * (self.variance + self.process_noise)
         self.phi = self.phi + gain * (measured - self.phi)
         self.n_updates += 1
+        return self.phi
+
+
+_BANK_STEPS: dict = {}
+
+
+def _jit_f64(fn):
+    """jit ``fn`` and dispatch it under scoped x64 so the bank updates run
+    in float64 (matching the scalar filters) without flipping global jax
+    config for the rest of the process.  Jitted wrappers are cached per
+    function, so every bank instance shares one compiled step (the steps
+    take all hyperparameters as arguments — nothing instance-specific is
+    baked into the trace)."""
+    if fn in _BANK_STEPS:
+        return _BANK_STEPS[fn]
+    import jax
+
+    jfn = jax.jit(fn)
+
+    def call(*args):
+        from jax.experimental import enable_x64
+        with enable_x64():
+            out = jfn(*[np.asarray(a) for a in args])
+        return tuple(np.asarray(o) for o in out)
+
+    _BANK_STEPS[fn] = call
+    return call
+
+
+def _slowdown_bank_step(mu, sigma, gain, q, obs, prof, miss, mask,
+                        q0, alpha, r, miss_inflation):
+    import jax.numpy as jnp
+
+    ratio = obs / prof
+    ratio = jnp.where(miss, ratio * (1.0 + miss_inflation), ratio)
+    y = ratio - mu
+    q_new = jnp.maximum(q0, alpha * q + (1.0 - alpha) * (gain * y) ** 2)
+    denom = (1.0 - gain) * sigma + q_new + r
+    gain_new = ((1.0 - gain) * sigma + q_new) / denom
+    mu_new = mu + gain_new * y
+    sigma_new = (1.0 - gain) * sigma + q_new
+    return (jnp.where(mask, mu_new, mu), jnp.where(mask, sigma_new, sigma),
+            jnp.where(mask, gain_new, gain), jnp.where(mask, q_new, q))
+
+
+def _idle_bank_step(phi, var, idle, active, mask, s, v):
+    import jax.numpy as jnp
+
+    measured = idle / active
+    gain = (var + s) / (var + s + v)
+    var_new = (1.0 - gain) * (var + s)
+    phi_new = phi + gain * (measured - phi)
+    return (jnp.where(mask, phi_new, phi), jnp.where(mask, var_new, var))
+
+
+class SlowdownFilterBank:
+    """Struct-of-arrays :class:`SlowdownFilter` over S streams (Eq. 6).
+
+    One fused update advances every stream; ``mask`` lets streams that had
+    no measurement this tick keep their state untouched.
+    """
+
+    def __init__(self, n_streams: int, *, mu0: float = 1.0,
+                 sigma0: float = 0.1, gain0: float = 0.5,
+                 meas_noise: float = 1e-3, process_noise_floor: float = 0.1,
+                 alpha: float = 0.3, miss_inflation: float = 0.2):
+        s = n_streams
+        self.mu = np.full(s, mu0, dtype=np.float64)
+        self.sigma = np.full(s, sigma0, dtype=np.float64)
+        self.gain = np.full(s, gain0, dtype=np.float64)
+        self.process_noise = np.full(s, process_noise_floor,
+                                     dtype=np.float64)
+        self.meas_noise = meas_noise
+        self.process_noise_floor = process_noise_floor
+        self.alpha = alpha
+        self.miss_inflation = miss_inflation
+        self.n_updates = np.zeros(s, dtype=np.int64)
+        self._step = _jit_f64(_slowdown_bank_step)
+
+    def observe(self, observed_latency: np.ndarray,
+                profiled_latency: np.ndarray,
+                deadline_missed: np.ndarray | None = None,
+                mask: np.ndarray | None = None) -> np.ndarray:
+        s = self.mu.shape[0]
+        miss = np.zeros(s, bool) if deadline_missed is None \
+            else np.asarray(deadline_missed, bool)
+        m = np.ones(s, bool) if mask is None else np.asarray(mask, bool)
+        prof = np.asarray(profiled_latency, np.float64)
+        if np.any(prof[m] <= 0.0):
+            raise ValueError("profiled_latency must be positive")
+        # Masked-out lanes still flow through the fused update; give them a
+        # harmless positive divisor.
+        prof = np.where(m, prof, 1.0)
+        self.mu, self.sigma, self.gain, self.process_noise = self._step(
+            self.mu, self.sigma, self.gain, self.process_noise,
+            np.asarray(observed_latency, np.float64), prof, miss, m,
+            self.process_noise_floor, self.alpha, self.meas_noise,
+            self.miss_inflation)
+        self.n_updates += m
+        return self.mu
+
+    @property
+    def std(self) -> np.ndarray:
+        return np.maximum(self.sigma, 1e-6)
+
+
+class IdlePowerFilterBank:
+    """Struct-of-arrays :class:`IdlePowerFilter` over S streams (Eq. 8)."""
+
+    def __init__(self, n_streams: int, *, phi0: float = 0.3,
+                 variance0: float = 0.01, process_noise: float = 1e-4,
+                 meas_noise: float = 1e-3):
+        self.phi = np.full(n_streams, phi0, dtype=np.float64)
+        self.variance = np.full(n_streams, variance0, dtype=np.float64)
+        self.process_noise = process_noise
+        self.meas_noise = meas_noise
+        self.n_updates = np.zeros(n_streams, dtype=np.int64)
+        self._step = _jit_f64(_idle_bank_step)
+
+    def observe(self, idle_power: np.ndarray, active_power: np.ndarray,
+                mask: np.ndarray | None = None) -> np.ndarray:
+        s = self.phi.shape[0]
+        m = np.ones(s, bool) if mask is None else np.asarray(mask, bool)
+        active = np.asarray(active_power, np.float64)
+        if np.any(active[m] <= 0.0):
+            raise ValueError("active_power must be positive")
+        active = np.where(m, active, 1.0)
+        self.phi, self.variance = self._step(
+            self.phi, self.variance, np.asarray(idle_power, np.float64),
+            active, m, self.process_noise, self.meas_noise)
+        self.n_updates += m
         return self.phi
 
 

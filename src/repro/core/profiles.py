@@ -47,6 +47,22 @@ class Candidate:
     level: int = 0             # nesting level within the group (1-based)
 
 
+@dataclasses.dataclass(frozen=True)
+class StaircaseTensors:
+    """Padded anytime staircases for the batched scoring engine.
+
+    ``lvl_lat[k, m, :]`` is the profiled latency of level m+1 of candidate
+    k's staircase at each power bucket, ``lvl_acc[k, m]`` its accuracy, and
+    ``lvl_valid[k, m]`` whether the level exists (padding is masked out).
+    Traditional candidates are 1-level staircases of themselves.
+    """
+
+    lvl_lat: np.ndarray     # [K, M, L] float64
+    lvl_acc: np.ndarray     # [K, M]   float64
+    lvl_valid: np.ndarray   # [K, M]   bool
+    n_levels: np.ndarray    # [K]      int
+
+
 @dataclasses.dataclass
 class ProfileTable:
     """The (models × power buckets) profile the controller operates on."""
@@ -81,6 +97,51 @@ class ProfileTable:
         for g in groups.values():
             g.sort(key=lambda i: self.candidates[i].level)
         return groups
+
+    def staircase_rows(self) -> dict[int, list[int]]:
+        """Per-candidate staircase prefix: candidate k -> the candidate
+        indices of its levels 1..m (an anytime level-m candidate carries
+        its group's prefix; a traditional model is just ``[k]``).  Single
+        source of truth for both the padded staircase tensors and the
+        batched engine's weight matrix."""
+        rows = {i: [i] for i in range(len(self.candidates))}
+        for _, idxs in self.anytime_groups().items():
+            for pos, i in enumerate(idxs):
+                rows[i] = idxs[:pos + 1]
+        return rows
+
+    def staircase_tensors(self) -> "StaircaseTensors":
+        """Padded per-candidate anytime staircases (DESIGN.md §4).
+
+        Every candidate is treated as a staircase: an anytime candidate at
+        position m of its group has levels 1..m (the group prefix), a
+        traditional candidate is a 1-level staircase of itself — with one
+        level, Eq. 10 reduces exactly to Eq. 7, so the whole (model, power)
+        grid scores through ONE branch-free staircase expression.  Levels
+        are padded to ``M = max levels`` with ``valid=False`` rows so the
+        tensors stack rectangularly for the batched jit engine.
+
+        Built once per table and cached (profile build time, not decision
+        time).
+        """
+        if getattr(self, "_staircase_cache", None) is None:
+            k, l = self.latency.shape
+            rows = self.staircase_rows()
+            m = max(len(r) for r in rows.values()) if rows else 1
+            lvl_lat = np.ones((k, m, l), dtype=np.float64)
+            lvl_acc = np.zeros((k, m), dtype=np.float64)
+            lvl_valid = np.zeros((k, m), dtype=bool)
+            n_levels = np.zeros(k, dtype=np.int64)
+            for i, r in rows.items():
+                lvl_lat[i, :len(r)] = self.latency[r, :]
+                lvl_acc[i, :len(r)] = [self.candidates[j].accuracy
+                                       for j in r]
+                lvl_valid[i, :len(r)] = True
+                n_levels[i] = len(r)
+            object.__setattr__(self, "_staircase_cache", StaircaseTensors(
+                lvl_lat=lvl_lat, lvl_acc=lvl_acc, lvl_valid=lvl_valid,
+                n_levels=n_levels))
+        return self._staircase_cache
 
     def subset(self, indices: Sequence[int]) -> "ProfileTable":
         idx = list(indices)

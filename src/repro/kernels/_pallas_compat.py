@@ -1,0 +1,15 @@
+"""Version shim for the Pallas TPU compiler-params rename.
+
+Newer jax exposes ``jax.experimental.pallas.tpu.CompilerParams``; older
+releases (e.g. 0.4.x, which this container ships) call the same dataclass
+``TPUCompilerParams``.  Kernels import ``CompilerParams`` from here so they
+run on both.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams",
+                         getattr(_pltpu, "TPUCompilerParams", None))
+assert CompilerParams is not None, "unsupported pallas version"

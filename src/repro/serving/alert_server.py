@@ -1,9 +1,18 @@
 """The end-to-end ALERT serving loop over a REAL model on this host.
 
-Ties together: ServeEngine (per-level compiled programs), AlertController
-(Kalman feedback + Eq. 4/5 selection), DeadlineBatcher, and a measured
-ProfileTable built at startup (paper: t^train profiling).  This is what
-``examples/serve_alert.py`` drives.
+Ties together: ServeEngine (per-level compiled programs), the batched
+scoring engine (Kalman feedback + Eq. 4/5 selection), DeadlineBatcher, and
+a measured ProfileTable built at startup (paper: t^train profiling).  This
+is what ``examples/serve_alert.py`` drives.
+
+Two frontends share the profiling pass and the scoring engine:
+
+* :class:`AlertServer` — one request stream; its ``AlertController`` is the
+  S=1 wrapper over :class:`~repro.core.batched.BatchedAlertEngine`.
+* :class:`FleetAlertServer` — S request streams multiplexed onto one
+  ServeEngine: per tick, ONE batched engine call scores every stream's
+  (model, power) grid, then the per-level compiled programs execute each
+  stream's pick and a fused filter-bank update absorbs all measurements.
 
 Power on this host cannot be actuated (see DESIGN.md §2), so the power
 dimension is bookkeeping through the same PowerModel the profiles use; the
@@ -14,11 +23,12 @@ compiled programs with genuinely different latencies.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 
+from repro.core.batched import BatchedAlertEngine, WindowedGoalBank
 from repro.core.controller import AlertController, Constraints, Goal
+from repro.core.kalman import IdlePowerFilterBank, SlowdownFilterBank
 from repro.core.power import PowerModel
 from repro.core.profiles import Candidate, ProfileTable
 from repro.serving.engine import ServeEngine
@@ -35,6 +45,44 @@ class ServedInput:
     feasible: bool
 
 
+def profile_serve_table(engine: ServeEngine, params,
+                        level_accuracies: list[float],
+                        power_model: PowerModel,
+                        n_power_buckets: int = 4,
+                        profile_iters: int = 3, q_fail: float = 0.0,
+                        prompt_len: int = 8,
+                        gen_tokens: int = 4) -> ProfileTable:
+    """t^train profiling pass: measure each anytime level on this host and
+    extrapolate across power buckets with the compute-bound 1/f rule."""
+    cfg = engine.model.cfg
+    levels = engine.levels
+    base = np.zeros(len(levels))
+    prompt = np.zeros((engine.batch_size, prompt_len), np.int32)
+    for li, lvl in enumerate(levels):
+        engine.generate(params, prompt, gen_tokens, level=lvl)  # warmup
+        ts = []
+        for _ in range(profile_iters):
+            r = engine.generate(params, prompt, gen_tokens, level=lvl)
+            ts.append(r["latency"])
+        base[li] = float(np.mean(ts))
+
+    caps = power_model.buckets(n_power_buckets)
+    lat = np.zeros((len(levels), len(caps)))
+    pw = np.zeros_like(lat)
+    for j, cap in enumerate(caps):
+        f = power_model.speed_fraction(cap)
+        lat[:, j] = base / f
+        pw[:, j] = power_model.power_at_fraction(f)
+    cands = [
+        Candidate(name=f"level{lvl}", flops=0.0, bytes_hbm=0.0,
+                  accuracy=level_accuracies[li],
+                  is_anytime_level=cfg.nest_levels > 1,
+                  anytime_group="anytime" if cfg.nest_levels > 1
+                  else None, level=li + 1)
+        for li, lvl in enumerate(levels)]
+    return ProfileTable(cands, caps, lat, pw, q_fail=q_fail)
+
+
 class AlertServer:
     def __init__(self, engine: ServeEngine, params,
                  level_accuracies: list[float], goal: Goal,
@@ -49,36 +97,10 @@ class AlertServer:
         self.gen_tokens = gen_tokens
         pm = power_model or PowerModel()
         self.power_model = pm
-        cfg = engine.model.cfg
-        levels = engine.levels
-
-        # --- profiling pass (t^train): measure each level on this host ---
-        base = np.zeros(len(levels))
-        prompt = np.zeros((engine.batch_size, prompt_len), np.int32)
-        for li, lvl in enumerate(levels):
-            self.engine.generate(params, prompt, gen_tokens, level=lvl)
-            ts = []
-            for _ in range(profile_iters):
-                r = self.engine.generate(params, prompt, gen_tokens,
-                                         level=lvl)
-                ts.append(r["latency"])
-            base[li] = float(np.mean(ts))
-
-        caps = pm.buckets(n_power_buckets)
-        lat = np.zeros((len(levels), len(caps)))
-        pw = np.zeros_like(lat)
-        for j, cap in enumerate(caps):
-            f = pm.speed_fraction(cap)
-            lat[:, j] = base / f
-            pw[:, j] = pm.power_at_fraction(f)
-        cands = [
-            Candidate(name=f"level{lvl}", flops=0.0, bytes_hbm=0.0,
-                      accuracy=level_accuracies[li],
-                      is_anytime_level=cfg.nest_levels > 1,
-                      anytime_group="anytime" if cfg.nest_levels > 1
-                      else None, level=li + 1)
-            for li, lvl in enumerate(levels)]
-        self.table = ProfileTable(cands, caps, lat, pw, q_fail=q_fail)
+        self.table = profile_serve_table(
+            engine, params, level_accuracies, pm,
+            n_power_buckets=n_power_buckets, profile_iters=profile_iters,
+            q_fail=q_fail, prompt_len=prompt_len, gen_tokens=gen_tokens)
         self.controller = AlertController(self.table, goal)
         self.history: list[ServedInput] = []
 
@@ -105,3 +127,116 @@ class AlertServer:
                           energy=energy, feasible=d.feasible)
         self.history.append(out)
         return out
+
+
+class FleetAlertServer:
+    """S concurrent request streams, scored by one batched engine call.
+
+    Each stream keeps its own Kalman state (slow-down xi, idle-power phi)
+    and windowed accuracy goal, held as struct-of-arrays filter banks.  A
+    ``serve_tick`` scores ALL streams' (model, power) grids in a single
+    jit-compiled pass, executes every stream's pick through the per-level
+    compiled programs, and absorbs all measurements with one fused bank
+    update — the controller overhead per stream shrinks with S, which is
+    the paper's overhead argument (0.6-1.7 % per input) at fleet scale.
+    """
+
+    def __init__(self, engine: ServeEngine, params,
+                 level_accuracies: list[float], goal: Goal,
+                 n_streams: int,
+                 power_model: PowerModel | None = None,
+                 n_power_buckets: int = 4,
+                 profile_iters: int = 3, q_fail: float = 0.0,
+                 prompt_len: int = 8, gen_tokens: int = 4,
+                 accuracy_window: int = 10):
+        self.engine = engine
+        self.params = params
+        self.goal = goal
+        self.gen_tokens = gen_tokens
+        self.n_streams = n_streams
+        pm = power_model or PowerModel()
+        self.power_model = pm
+        self.table = profile_serve_table(
+            engine, params, level_accuracies, pm,
+            n_power_buckets=n_power_buckets, profile_iters=profile_iters,
+            q_fail=q_fail, prompt_len=prompt_len, gen_tokens=gen_tokens)
+        self.scoring = BatchedAlertEngine(self.table, goal)
+        self.slowdown = SlowdownFilterBank(n_streams)
+        self.idle_power = IdlePowerFilterBank(n_streams)
+        self.accuracy_window = accuracy_window
+        self._goal_bank: WindowedGoalBank | None = None
+        self.history: list[list[ServedInput]] = []
+
+    def _effective_accuracy_goal(self, constraints: list[Constraints]
+                                 ) -> np.ndarray | None:
+        """Per-stream effective Q_goal from each stream's own constraint.
+        A stream whose goal changes gets its accuracy window reset (same
+        semantics as the scalar controller's recreate-on-change), without
+        discarding the other streams' history."""
+        goals = [c.accuracy_goal for c in constraints]
+        if all(g is None for g in goals):
+            return None
+        if any(g is None for g in goals):
+            raise ValueError("accuracy_goal must be set on every stream's "
+                             "Constraints (or on none)")
+        arr = np.asarray(goals, dtype=np.float64)
+        if self._goal_bank is None:
+            self._goal_bank = WindowedGoalBank(arr, self.n_streams,
+                                               self.accuracy_window)
+        else:
+            self._goal_bank.set_goals(arr)
+        return self._goal_bank.current_goal()
+
+    def serve_tick(self, prompts: list[np.ndarray],
+                   constraints: list[Constraints]) -> list[ServedInput]:
+        """Serve one input per stream; one engine call scores all of them."""
+        assert len(prompts) == self.n_streams
+        assert len(constraints) == self.n_streams
+        deadlines = np.asarray([c.deadline for c in constraints])
+        e_goals = None
+        if self.goal is Goal.MAXIMIZE_ACCURACY:
+            vals = [c.energy_goal for c in constraints]
+            if any(v is None for v in vals):
+                raise ValueError("maximize-accuracy task needs energy_goal "
+                                 "on every stream's Constraints")
+            e_goals = np.asarray(vals, dtype=np.float64)
+        q_goals = self._effective_accuracy_goal(constraints)
+        batch = self.scoring.select(
+            self.slowdown.mu, self.slowdown.sigma, self.idle_power.phi,
+            deadlines, accuracy_goal=q_goals, energy_goal=e_goals)
+
+        outs: list[ServedInput] = []
+        observed = np.zeros(self.n_streams)
+        missed = np.zeros(self.n_streams, bool)
+        accs = np.zeros(self.n_streams)
+        active_p = np.zeros(self.n_streams)
+        for s in range(self.n_streams):
+            i = int(batch.model_index[s])
+            lvl = self.engine.levels[i]
+            r = self.engine.generate(self.params, prompts[s],
+                                     self.gen_tokens, level=lvl,
+                                     deadline_s=float(deadlines[s]))
+            lat = r["latency"]
+            miss = (lat > deadlines[s]) or not r["complete"]
+            acc = self.table.q_fail if miss \
+                else self.table.candidates[i].accuracy
+            cap = float(self.table.power_caps[int(batch.power_index[s])])
+            f = self.power_model.speed_fraction(cap)
+            p = self.power_model.power_at_fraction(f)
+            run_t = min(lat, float(deadlines[s]))
+            energy = p * run_t + float(self.idle_power.phi[s]) * p * \
+                max(float(deadlines[s]) - run_t, 0.0)
+            observed[s], missed[s], accs[s] = run_t, miss, acc
+            active_p[s] = p
+            outs.append(ServedInput(
+                level=lvl or 0, power_cap=cap, latency=lat,
+                missed=bool(miss), accuracy=float(acc),
+                energy=float(energy), feasible=bool(batch.feasible[s])))
+
+        profiled = self.table.latency[batch.model_index, batch.power_index]
+        self.slowdown.observe(observed, profiled, deadline_missed=missed)
+        self.idle_power.observe(0.25 * active_p, active_p)
+        if self._goal_bank is not None:
+            self._goal_bank.record(accs)
+        self.history.append(outs)
+        return outs

@@ -19,15 +19,23 @@ Schemes (paper Table 3):
     alert_power  — fastest traditional DNN, controller power pick
     oracle       — per-input perfect knowledge, dynamic optimal
     oracle_static— best single (model, power) fixed for the whole trace
+
+Scale: :class:`FleetSim` advances S independent streams in lockstep and
+scores ALL of them with one :class:`BatchedAlertEngine` call per tick
+(struct-of-arrays Kalman banks, vectorised delivery).  The single-stream
+``InferenceSim.run_alert`` is the S=1 slice of the same path.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import numpy as np
 
-from repro.core.controller import AlertController, Constraints, Goal
+from repro.core.batched import BatchedAlertEngine, WindowedGoalBank
+from repro.core.controller import Constraints, Goal
+from repro.core.kalman import IdlePowerFilterBank, SlowdownFilterBank
 from repro.core.profiles import ProfileTable
 
 
@@ -95,6 +103,10 @@ class EnvironmentTrace:
 
     def __init__(self, phases: tuple[Phase, ...], seed: int = 0,
                  length_cv: float = 0.0, deadline_cv: float = 0.0):
+        self.phases = tuple(phases)
+        self.seed = seed
+        self.length_cv = length_cv
+        self.deadline_cv = deadline_cv
         rng = np.random.default_rng(seed)
         xs, phase_id = [], []
         for pi, ph in enumerate(phases):
@@ -195,55 +207,14 @@ class InferenceSim:
                   dnn_control: bool = True, overhead: float = 0.0,
                   paper_faithful_energy: bool = True,
                   scheme_name: str = "alert") -> TraceResult:
-        table = self.table
-        idx = list(range(len(table.candidates)))
-        if not anytime:
-            idx = self._trad_idx
-        if not dnn_control:
-            # fastest traditional DNN only (ALERT_Power ablation)
-            fastest = min(self._trad_idx,
-                          key=lambda i: table.latency[i, -1])
-            idx = [fastest]
-        sub = table.subset(idx)
-        ctl = AlertController(sub, goal, overhead=overhead,
-                              paper_faithful_energy=paper_faithful_energy)
-        if not power_control:
-            # System default: race-to-idle = always the max power cap.
-            full_power_j = len(table.power_caps) - 1
-
-        N = self.trace.n
-        dvec = self._deadline_vec(cons)
-        bvec = self._budget_vec(cons)
-        out = TraceResult(np.zeros(N), np.zeros(N), np.zeros(N),
-                          np.zeros(N, bool), scheme_name, budget=bvec)
-        for n in range(N):
-            cons_n = Constraints(
-                deadline=float(dvec[n]),
-                accuracy_goal=cons.accuracy_goal,
-                energy_goal=float(bvec[n]) if bvec is not None else None)
-            d = ctl.select(cons_n)
-            j = full_power_j if not power_control else d.power_index
-            i_local = d.model_index
-            i = idx[i_local]
-            scale = self.trace.realized_scale(n)
-            lat, acc, en, missed, obs = self._deliver(i, j, scale,
-                                                      float(dvec[n]))
-            out.latency[n], out.accuracy[n] = lat, acc
-            out.energy[n], out.missed[n] = en, missed
-            if missed and obs is not None:
-                # Anytime co-design: the deepest completed level's true
-                # completion time is an uncensored slowdown observation.
-                ctl.observe(obs[0], deadline_missed=False,
-                            idle_power=self.phi_true *
-                            self.table.run_power[i, j],
-                            delivered_accuracy=acc,
-                            profiled_override=obs[1])
-            else:
-                ctl.observe(lat, deadline_missed=bool(missed),
-                            idle_power=self.phi_true *
-                            self.table.run_power[i, j],
-                            delivered_accuracy=acc)
-        return out
+        """One ALERT stream = the S=1 slice of the fleet path."""
+        fleet = FleetSim(self.table, [self.trace], phi_true=self.phi_true)
+        res = fleet.run_alert(
+            goal, cons, anytime=anytime, power_control=power_control,
+            dnn_control=dnn_control, overhead=overhead,
+            paper_faithful_energy=paper_faithful_energy,
+            scheme_name=scheme_name)
+        return res.stream(0)
 
     # -------------------------------------------------------------- #
     def _delivery_tensors(self, cons: Constraints):
@@ -332,6 +303,20 @@ class InferenceSim:
         return best[1]
 
     # -------------------------------------------------------------- #
+    def run_alert_fleet(self, goal: Goal, cons: Constraints,
+                        n_streams: int, *, seed: int = 0,
+                        **kwargs) -> "FleetResult":
+        """Clone this sim's environment phases into ``n_streams``
+        independently-seeded streams and run them in lockstep (one batched
+        engine call per tick)."""
+        t = self.trace
+        fleet = FleetSim.from_phases(self.table, t.phases, n_streams,
+                                     seed=seed, phi_true=self.phi_true,
+                                     length_cv=t.length_cv,
+                                     deadline_cv=t.deadline_cv)
+        return fleet.run_alert(goal, cons, **kwargs)
+
+    # -------------------------------------------------------------- #
     def run_scheme(self, scheme: str, goal: Goal,
                    cons: Constraints) -> TraceResult:
         if scheme == "alert":
@@ -356,3 +341,181 @@ class InferenceSim:
         if scheme == "oracle_static":
             return self.run_oracle_static(goal, cons)
         raise ValueError(scheme)
+
+
+# ------------------------------------------------------------------ #
+# Fleet-scale simulation: S streams, one engine call per tick         #
+# ------------------------------------------------------------------ #
+@dataclasses.dataclass
+class FleetResult:
+    """Per-stream, per-input outcomes of a fleet run: arrays are [S, N]."""
+
+    energy: np.ndarray
+    accuracy: np.ndarray
+    latency: np.ndarray
+    missed: np.ndarray
+    scheme: str = ""
+    budget: np.ndarray | None = None   # [S, N]
+
+    @property
+    def n_streams(self) -> int:
+        return self.energy.shape[0]
+
+    def stream(self, s: int) -> TraceResult:
+        return TraceResult(
+            self.energy[s], self.accuracy[s], self.latency[s],
+            self.missed[s], self.scheme,
+            budget=None if self.budget is None else self.budget[s])
+
+    @property
+    def results(self) -> list[TraceResult]:
+        return [self.stream(s) for s in range(self.n_streams)]
+
+    @property
+    def mean_energy(self) -> float:
+        return float(self.energy.mean())
+
+    @property
+    def mean_error(self) -> float:
+        return float(1.0 - self.accuracy.mean())
+
+    @property
+    def miss_rate(self) -> float:
+        return float(self.missed.mean())
+
+
+class FleetSim:
+    """S independent ALERT streams advanced in lockstep.
+
+    Every stream has its own environment randomness, Kalman state, and
+    windowed accuracy goal, but per tick the estimation + selection for ALL
+    streams is ONE :class:`BatchedAlertEngine` call over the [S, K, L]
+    grid, and the filter banks apply one fused update.  Semantics per
+    stream are identical to the scalar loop the paper describes (and that
+    ``InferenceSim.run_alert`` exposed pre-fleet): windowed accuracy goal,
+    miss inflation, overhead subtraction, relaxation priority, and the
+    anytime uncensored-observation co-design are all preserved —
+    ``tests/test_batched.py`` pins this with an exact-trajectory test.
+    """
+
+    def __init__(self, table: ProfileTable,
+                 traces: Sequence[EnvironmentTrace],
+                 phi_true: float = 0.25):
+        ns = {t.n for t in traces}
+        assert len(ns) == 1, "all streams must have equal-length traces"
+        self.table = table
+        self.phi_true = phi_true
+        self.n_streams = len(traces)
+        self.n_inputs = ns.pop()
+        self.xi = np.stack([t.xi for t in traces])                  # [S, N]
+        self.lam = np.stack([t.lam for t in traces])                # [S, N]
+        self.deadline_scale = np.stack([t.deadline_scale
+                                        for t in traces])           # [S, N]
+        groups = table.anytime_groups()
+        self._anytime_idx = sorted({i for g in groups.values() for i in g})
+        self._trad_idx = [i for i in range(len(table.candidates))
+                          if i not in self._anytime_idx]
+        self._is_anytime = np.zeros(len(table.candidates), bool)
+        self._is_anytime[self._anytime_idx] = True
+
+    @classmethod
+    def from_phases(cls, table: ProfileTable, phases: tuple[Phase, ...],
+                    n_streams: int, *, seed: int = 0,
+                    phi_true: float = 0.25, length_cv: float = 0.0,
+                    deadline_cv: float = 0.0) -> "FleetSim":
+        traces = [EnvironmentTrace(phases, seed=seed + s,
+                                   length_cv=length_cv,
+                                   deadline_cv=deadline_cv)
+                  for s in range(n_streams)]
+        return cls(table, traces, phi_true=phi_true)
+
+    # -------------------------------------------------------------- #
+    def run_alert(self, goal: Goal, cons: Constraints, *,
+                  anytime: bool = True, power_control: bool = True,
+                  dnn_control: bool = True, overhead: float = 0.0,
+                  paper_faithful_energy: bool = True,
+                  scheme_name: str = "alert") -> FleetResult:
+        table = self.table
+        idx = list(range(len(table.candidates)))
+        if not anytime:
+            idx = self._trad_idx
+        if not dnn_control:
+            # fastest traditional DNN only (ALERT_Power ablation)
+            fastest = min(self._trad_idx,
+                          key=lambda i: table.latency[i, -1])
+            idx = [fastest]
+        idx_arr = np.asarray(idx)
+        sub = table.subset(idx)
+        engine = BatchedAlertEngine(
+            sub, goal, overhead=overhead,
+            paper_faithful_energy=paper_faithful_energy)
+        s_n, n_in = self.n_streams, self.n_inputs
+        slow = SlowdownFilterBank(s_n)
+        idle = IdlePowerFilterBank(s_n)
+        goal_bank = None if cons.accuracy_goal is None else \
+            WindowedGoalBank(cons.accuracy_goal, s_n)
+        # System default power: race-to-idle = always the max cap.
+        full_power_j = len(table.power_caps) - 1
+
+        # Full-table staircases for vectorised anytime delivery.
+        st = table.staircase_tensors()
+        m = st.lvl_lat.shape[1]
+
+        dmat = cons.deadline * self.deadline_scale                  # [S, N]
+        bmat = None if cons.energy_goal is None else \
+            cons.energy_goal * self.deadline_scale
+        out = FleetResult(np.zeros((s_n, n_in)), np.zeros((s_n, n_in)),
+                          np.zeros((s_n, n_in)), np.zeros((s_n, n_in), bool),
+                          scheme_name, budget=bmat)
+        scale_mat = self.xi * self.lam                              # [S, N]
+
+        for n in range(n_in):
+            dvec = dmat[:, n]
+            q_goal_eff = None if goal_bank is None else \
+                goal_bank.current_goal()
+            e_goal = None if bmat is None else bmat[:, n]
+            batch = engine.select(slow.mu, slow.sigma, idle.phi, dvec,
+                                  accuracy_goal=q_goal_eff,
+                                  energy_goal=e_goal)
+            i_local = batch.model_index                             # [S]
+            j_pick = batch.power_index                              # [S]
+            j_act = np.full(s_n, full_power_j) if not power_control \
+                else j_pick
+            i_glob = idx_arr[i_local]
+            scale = scale_mat[:, n]
+
+            # --- vectorised delivery (staircase Eq. 10 for real) ---
+            lat = table.latency[i_glob, j_act] * scale
+            missed = lat > dvec
+            lvl_lat = st.lvl_lat[i_glob, :, j_act]                  # [S, M]
+            completed = st.lvl_valid[i_glob] & \
+                (lvl_lat * scale[:, None] <= dvec[:, None])
+            any_done = completed.any(axis=1)
+            last_done = (m - 1) - np.argmax(completed[:, ::-1], axis=1)
+            rows = np.arange(s_n)
+            acc = np.where(any_done,
+                           st.lvl_acc[i_glob, last_done], table.q_fail)
+            run_t = np.minimum(lat, dvec)
+            p = table.run_power[i_glob, j_act]
+            energy = p * run_t + self.phi_true * p * \
+                np.maximum(dvec - run_t, 0.0)
+            out.latency[:, n] = run_t
+            out.accuracy[:, n] = acc
+            out.energy[:, n] = energy
+            out.missed[:, n] = missed
+
+            # --- fused feedback (anytime co-design: a missed deadline
+            # with a completed level is an UNCENSORED observation) ---
+            use_obs = missed & self._is_anytime[i_glob] & any_done
+            obs_lat = lvl_lat[rows, last_done] * scale
+            obs_prof = lvl_lat[rows, last_done]
+            observed = np.where(use_obs, obs_lat, run_t)
+            profiled = np.where(use_obs, obs_prof,
+                                sub.latency[i_local, j_pick])
+            miss_flag = np.where(use_obs, False, missed)
+            slow.observe(observed, profiled, deadline_missed=miss_flag)
+            idle.observe(self.phi_true * table.run_power[i_glob, j_act],
+                         sub.run_power[i_local, j_pick])
+            if goal_bank is not None:
+                goal_bank.record(acc)
+        return out

@@ -1,0 +1,299 @@
+"""Tests for the fleet-scale batched scoring engine (repro.core.batched).
+
+Three layers of guarantees:
+
+* **Parity** — the batched engine's decisions are identical to the scalar
+  NumPy reference (seed semantics, repro.core.reference) across random
+  profiles, goals, constraints, and both relaxation branches; estimates
+  agree to ~1e-12 (both run float64).
+* **State parity** — the struct-of-arrays Kalman banks and windowed-goal
+  bank reproduce the scalar filters element-for-element.
+* **Stability** — with static S, estimate/select compile once and are
+  never re-traced across a 400-input trace; the fleet sim in lockstep is
+  bit-identical to independent single-stream runs and to the pre-engine
+  scalar simulation loop.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.batched import (BatchedAlertEngine, RELAXED_NAMES,
+                                WindowedGoalBank)
+from repro.core.controller import (AlertController, Constraints, Goal,
+                                   WindowedAccuracyGoal)
+from repro.core.kalman import (IdlePowerFilter, IdlePowerFilterBank,
+                               SlowdownFilter, SlowdownFilterBank)
+from repro.core.reference import ScalarReferenceController
+from repro.serving.sim import ENVS, EnvironmentTrace, FleetSim, InferenceSim
+
+from benchmarks.common import deadline_range, family_table
+from benchmarks.controller_bench import random_state, random_table
+
+
+def _ref_with_state(table, goal, mu, sigma, phi, overhead=0.0):
+    ref = ScalarReferenceController(table, goal, overhead=overhead)
+    ref.slowdown.mu = float(mu)
+    ref.slowdown.sigma = float(sigma)
+    ref.idle_power.phi = float(phi)
+    return ref
+
+
+class TestParity:
+    @pytest.mark.parametrize("goal", [Goal.MINIMIZE_ENERGY,
+                                      Goal.MAXIMIZE_ACCURACY])
+    def test_random_sweep_decisions_identical(self, goal):
+        """Random profiles/goals/constraints: engine == scalar reference,
+        including anytime staircases and relaxation branches."""
+        rng = np.random.default_rng(42)
+        for _ in range(8):
+            table = random_table(rng)
+            med_lat = float(np.median(table.latency))
+            med_en = float(np.median(table.run_power)) * med_lat
+            overhead = float(rng.uniform(0, 0.1) * med_lat)
+            engine = BatchedAlertEngine(table, goal, overhead=overhead)
+            s = 12
+            mus, sds, phis = random_state(rng, s)
+            deadlines = rng.uniform(0.2, 3.0, s) * med_lat
+            goals = rng.uniform(0.3, 1.05, s) \
+                if goal is Goal.MINIMIZE_ENERGY \
+                else rng.uniform(0.0, 2.5, s) * med_en
+            kw = {"accuracy_goal" if goal is Goal.MINIMIZE_ENERGY
+                  else "energy_goal": goals}
+            batch = engine.select(mus, sds, phis, deadlines, **kw)
+            est = engine.estimate(mus, sds, phis,
+                                  np.maximum(deadlines - overhead, 1e-9))
+            for i in range(s):
+                ref = _ref_with_state(table, goal, mus[i], sds[i], phis[i],
+                                      overhead)
+                c_kw = {"accuracy_goal" if goal is Goal.MINIMIZE_ENERGY
+                        else "energy_goal": float(goals[i])}
+                d = ref.select(Constraints(deadline=float(deadlines[i]),
+                                           **c_kw))
+                assert d.model_index == int(batch.model_index[i])
+                assert d.power_index == int(batch.power_index[i])
+                assert d.feasible == bool(batch.feasible[i])
+                assert d.relaxed == RELAXED_NAMES[
+                    int(batch.relaxed_code[i])]
+                e = ref.estimate(max(float(deadlines[i]) - overhead, 1e-9))
+                np.testing.assert_allclose(est.accuracy[i], e.accuracy,
+                                           rtol=0, atol=1e-12)
+                np.testing.assert_allclose(est.energy[i], e.energy,
+                                           rtol=1e-12, atol=1e-12)
+                np.testing.assert_allclose(est.p_finish[i], e.p_finish,
+                                           rtol=0, atol=1e-12)
+
+    def test_relaxation_branches(self):
+        """Infeasible constraints relax in the paper's priority order and
+        match the reference on both branches."""
+        table = family_table("image")
+        # Max-accuracy with impossible budget: drop power first.
+        eng = BatchedAlertEngine(table, Goal.MAXIMIZE_ACCURACY)
+        b = eng.select(1.0, 0.1, 0.25, np.asarray([0.05]),
+                       energy_goal=np.asarray([1e-12]))
+        assert not b.feasible[0] and b.relaxed_name(0) == "power"
+        # Min-energy with unreachable accuracy: relax the goal.
+        eng2 = BatchedAlertEngine(table, Goal.MINIMIZE_ENERGY)
+        b2 = eng2.select(1.0, 0.1, 0.25, np.asarray([1e-7]),
+                         accuracy_goal=np.asarray([0.99]))
+        assert not b2.feasible[0] and b2.relaxed_name(0) == "accuracy"
+
+    def test_wrapper_is_engine_s1(self):
+        """AlertController (S=1 wrapper) tracks the reference through a
+        400-input feedback loop: identical decisions every step."""
+        table = family_table("image")
+        dls = deadline_range(table, 5)
+        ctl = AlertController(table, Goal.MINIMIZE_ENERGY, overhead=1e-4)
+        ref = ScalarReferenceController(table, Goal.MINIMIZE_ENERGY,
+                                        overhead=1e-4)
+        rng = np.random.default_rng(7)
+        for _ in range(400):
+            cons = Constraints(deadline=float(rng.choice(dls)),
+                               accuracy_goal=0.8)
+            d1, d2 = ctl.select(cons), ref.select(cons)
+            assert (d1.model_index, d1.power_index, d1.feasible,
+                    d1.relaxed) == (d2.model_index, d2.power_index,
+                                    d2.feasible, d2.relaxed)
+            obs = d1.predicted_latency * float(rng.lognormal(0.0, 0.25))
+            missed = obs > cons.deadline
+            for c in (ctl, ref):
+                c.observe(min(obs, cons.deadline),
+                          deadline_missed=bool(missed),
+                          idle_power=0.2 * table.run_power[
+                              d1.model_index, d1.power_index],
+                          delivered_accuracy=0.8)
+            assert np.isclose(ctl.slowdown.mu, ref.slowdown.mu,
+                              rtol=0, atol=0)
+
+
+class TestFilterBanks:
+    def test_slowdown_bank_matches_scalar(self):
+        s = 5
+        bank = SlowdownFilterBank(s)
+        scalars = [SlowdownFilter() for _ in range(s)]
+        rng = np.random.default_rng(3)
+        for _ in range(60):
+            obs = rng.uniform(0.5, 3.0, s)
+            prof = rng.uniform(0.5, 2.0, s)
+            miss = rng.random(s) < 0.3
+            bank.observe(obs, prof, deadline_missed=miss)
+            for i, f in enumerate(scalars):
+                f.observe(float(obs[i]), float(prof[i]),
+                          deadline_missed=bool(miss[i]))
+        np.testing.assert_allclose(bank.mu, [f.mu for f in scalars],
+                                   rtol=1e-12, atol=0)
+        np.testing.assert_allclose(bank.sigma, [f.sigma for f in scalars],
+                                   rtol=1e-12, atol=0)
+        np.testing.assert_allclose(bank.gain, [f.gain for f in scalars],
+                                   rtol=1e-12, atol=0)
+
+    def test_slowdown_bank_mask_freezes_streams(self):
+        bank = SlowdownFilterBank(3)
+        mu0 = bank.mu.copy()
+        bank.observe(np.full(3, 2.0), np.ones(3),
+                     mask=np.asarray([True, False, True]))
+        assert bank.mu[1] == mu0[1] and bank.n_updates[1] == 0
+        assert bank.mu[0] != mu0[0] and bank.n_updates[0] == 1
+
+    def test_idle_bank_matches_scalar(self):
+        s = 4
+        bank = IdlePowerFilterBank(s)
+        scalars = [IdlePowerFilter() for _ in range(s)]
+        rng = np.random.default_rng(4)
+        for _ in range(40):
+            idle = rng.uniform(5.0, 50.0, s)
+            active = rng.uniform(60.0, 200.0, s)
+            bank.observe(idle, active)
+            for i, f in enumerate(scalars):
+                f.observe(float(idle[i]), float(active[i]))
+        np.testing.assert_allclose(bank.phi, [f.phi for f in scalars],
+                                   rtol=1e-12, atol=0)
+
+    def test_windowed_goal_bank_per_stream_goals(self):
+        """Vector goals are honoured per stream; a goal change resets only
+        that stream's window (scalar recreate-on-change semantics)."""
+        bank = WindowedGoalBank(np.asarray([0.7, 0.9]), 2, window=5)
+        np.testing.assert_allclose(bank.current_goal(), [0.7, 0.9])
+        bank.record(np.asarray([0.1, 0.1]))
+        raised = bank.current_goal()
+        assert raised[0] > 0.7 and raised[1] > 0.9
+        bank.set_goals(np.asarray([0.8, 0.9]))   # stream 0 changes goal
+        g = bank.current_goal()
+        assert g[0] == 0.8                        # reset: fresh window
+        assert g[1] == raised[1]                  # untouched history
+
+    def test_windowed_goal_bank_matches_scalar(self):
+        s, window = 3, 5
+        bank = WindowedGoalBank(0.8, s, window)
+        scalars = [WindowedAccuracyGoal(0.8, window) for _ in range(s)]
+        rng = np.random.default_rng(5)
+        np.testing.assert_allclose(bank.current_goal(),
+                                   [w.current_goal() for w in scalars])
+        for _ in range(12):
+            acc = rng.uniform(0.0, 1.0, s)
+            bank.record(acc)
+            for i, w in enumerate(scalars):
+                w.record(float(acc[i]))
+            np.testing.assert_allclose(
+                bank.current_goal(), [w.current_goal() for w in scalars],
+                rtol=0, atol=1e-12)
+
+
+class TestCompileStability:
+    def test_no_retrace_across_400_inputs(self):
+        """With static S, estimate/select compile once; varying deadlines,
+        goals, and filter state never re-trace."""
+        table = family_table("image")
+        engine = BatchedAlertEngine(table, Goal.MINIMIZE_ENERGY,
+                                    overhead=1e-4)
+        rng = np.random.default_rng(0)
+        s = 32
+        dls = deadline_range(table, 5)
+        for _ in range(400):
+            mus, sds, phis = random_state(rng, s)
+            engine.select(mus, sds, phis, rng.choice(dls, s),
+                          accuracy_goal=rng.uniform(0.5, 0.9, s))
+            engine.estimate(mus, sds, phis, rng.choice(dls, s))
+        n_est, n_sel = engine.n_compiles()
+        assert n_est == 1, f"estimate re-traced: {n_est} cache entries"
+        assert n_sel == 1, f"select re-traced: {n_sel} cache entries"
+
+
+class TestFleetSim:
+    def test_fleet_matches_seed_scalar_loop(self):
+        """FleetSim S=1 reproduces the pre-engine scalar simulation loop
+        exactly (windowed goal, miss inflation, anytime uncensored
+        observations, overhead subtraction — everything)."""
+        table = family_table("image")
+        trace = EnvironmentTrace(ENVS["memory"], seed=1, deadline_cv=0.1)
+        sim = InferenceSim(table, trace)
+        dl = float(deadline_range(table, 3)[1])
+        for goal, kw in [
+                (Goal.MINIMIZE_ENERGY, dict(accuracy_goal=0.8)),
+                (Goal.MAXIMIZE_ACCURACY, dict(energy_goal=None))]:
+            cons = Constraints.from_power_budget(dl, 170.0) \
+                if goal is Goal.MAXIMIZE_ACCURACY \
+                else Constraints(deadline=dl, **kw)
+            fleet_res = sim.run_alert(goal, cons, overhead=1e-4)
+            # seed-semantics loop, scalar reference controller
+            ctl = ScalarReferenceController(table, goal, overhead=1e-4)
+            dvec = cons.deadline * trace.deadline_scale
+            bvec = None if cons.energy_goal is None else \
+                cons.energy_goal * trace.deadline_scale
+            for n in range(trace.n):
+                cons_n = Constraints(
+                    deadline=float(dvec[n]),
+                    accuracy_goal=cons.accuracy_goal,
+                    energy_goal=None if bvec is None else float(bvec[n]))
+                d = ctl.select(cons_n)
+                i, j = d.model_index, d.power_index
+                lat, acc, en, missed, obs = sim._deliver(
+                    i, j, trace.realized_scale(n), float(dvec[n]))
+                assert en == fleet_res.energy[n], f"step {n}"
+                assert acc == fleet_res.accuracy[n], f"step {n}"
+                assert missed == fleet_res.missed[n], f"step {n}"
+                if missed and obs is not None:
+                    ctl.observe(obs[0], deadline_missed=False,
+                                idle_power=sim.phi_true *
+                                table.run_power[i, j],
+                                delivered_accuracy=acc,
+                                profiled_override=obs[1])
+                else:
+                    ctl.observe(lat, deadline_missed=bool(missed),
+                                idle_power=sim.phi_true *
+                                table.run_power[i, j],
+                                delivered_accuracy=acc)
+
+    def test_fleet_lockstep_equals_independent_streams(self):
+        """S streams in one lockstep fleet == S separate single-stream
+        runs, element for element (no cross-stream leakage)."""
+        table = family_table("nlp")
+        dl = float(deadline_range(table, 3)[1])
+        cons = Constraints(deadline=dl, accuracy_goal=0.7)
+        fleet = FleetSim.from_phases(table, ENVS["cpu"], 3, seed=20)
+        fr = fleet.run_alert(Goal.MINIMIZE_ENERGY, cons)
+        assert fr.n_streams == 3
+        for s in range(3):
+            t_s = EnvironmentTrace(ENVS["cpu"], seed=20 + s)
+            single = InferenceSim(table, t_s).run_alert(
+                Goal.MINIMIZE_ENERGY, cons)
+            np.testing.assert_array_equal(fr.stream(s).energy,
+                                          single.energy)
+            np.testing.assert_array_equal(fr.stream(s).accuracy,
+                                          single.accuracy)
+            np.testing.assert_array_equal(fr.stream(s).missed,
+                                          single.missed)
+
+    def test_ablation_schemes_run_through_fleet(self):
+        """The Table-3 ablations (no-anytime / no-power / no-dnn) keep
+        working through the batched path."""
+        table = family_table("image")
+        trace = EnvironmentTrace(ENVS["default"], seed=0)
+        sim = InferenceSim(table, trace)
+        dl = float(deadline_range(table, 3)[1])
+        cons = Constraints.from_power_budget(dl, 170.0)
+        for scheme in ("alert", "alert_trad", "alert_dnn", "alert_power",
+                       "alert_plus"):
+            res = sim.run_scheme(scheme, Goal.MAXIMIZE_ACCURACY, cons)
+            assert res.scheme == scheme
+            assert np.all(res.energy > 0)
+            assert res.accuracy.shape == (trace.n,)

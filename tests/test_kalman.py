@@ -4,8 +4,8 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hypothesis_compat import (given, settings,  # noqa: F401
+                                      st)  # property tests skip without hypothesis
 
 from repro.core.kalman import IdlePowerFilter, ScalarKalman, SlowdownFilter
 

@@ -5,8 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hypothesis_compat import (given, settings,  # noqa: F401
+                                      st)  # property tests skip without hypothesis
 
 from repro.configs.base import ModelConfig
 from repro.models.moe import (capacity, moe, moe_gather, moe_init,

@@ -10,8 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hypothesis_compat import (given, settings,  # noqa: F401
+                                      st)  # property tests skip without hypothesis
 
 from repro.core.nesting import (DepthSpec, StripeSpec, block_triangular_mask,
                                 depth_nested_apply, freeze_prefix,

@@ -70,6 +70,34 @@ class TestServeEngine:
         assert out["tokens"].shape[1] < 40
 
 
+class TestFleetServer:
+    def test_fleet_tick_scores_all_streams_in_one_pass(self, nested_setup):
+        """FleetAlertServer: one batched engine call per tick serves S
+        streams over the real per-level compiled programs."""
+        from repro.serving.alert_server import FleetAlertServer
+
+        cfg, model, params = nested_setup
+        engine = ServeEngine(model, max_len=32, batch_size=2)
+        srv = FleetAlertServer(engine, params,
+                               level_accuracies=[0.6, 0.9],
+                               goal=Goal.MAXIMIZE_ACCURACY, n_streams=3,
+                               profile_iters=1, gen_tokens=3)
+        prompts = [np.zeros((2, 4), np.int32)] * 3
+        budget = float(np.median(srv.table.run_power)) * \
+            float(np.max(srv.table.latency)) * 2.0
+        cons = [Constraints(deadline=10.0, energy_goal=budget)] * 3
+        n0, _ = srv.scoring.n_compiles()
+        outs = srv.serve_tick(prompts, cons)
+        outs2 = srv.serve_tick(prompts, cons)
+        assert len(outs) == 3 and len(outs2) == 3
+        assert all(o.latency > 0 and o.energy > 0 for o in outs)
+        # feedback reached every stream's filter lane
+        assert np.all(srv.slowdown.n_updates == 2)
+        # scoring stayed on one compiled executable across ticks
+        _, n_sel = srv.scoring.n_compiles()
+        assert n_sel == 1
+
+
 class TestBatcher:
     def test_edf_order_and_batch_deadline(self):
         b = DeadlineBatcher(batch_size=2)

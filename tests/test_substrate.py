@@ -7,8 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hypothesis_compat import (given, settings,  # noqa: F401
+                                      st)  # property tests skip without hypothesis
 
 from repro import configs
 from repro.checkpoint import io as ckpt_io
