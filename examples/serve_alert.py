@@ -12,7 +12,11 @@ Pipeline:
      batched requests with deadlines, injecting a contention phase by
      tightening deadlines mid-stream;
   4. report per-phase level choices, deadline-miss rate, and delivered
-     accuracy.
+     accuracy;
+  5. multiplex a churning, goal-heterogeneous mini-fleet (minimize-energy
+     and maximize-accuracy tenants side by side) onto the same compiled
+     programs through FleetAlertServer: one masked batched engine call per
+     tick, admit/retire between ticks, zero re-traces while lanes recycle.
 
     PYTHONPATH=src python examples/serve_alert.py [--requests 60]
 """
@@ -52,7 +56,7 @@ def main():
                       order=2)
 
     # 1. joint anytime training -------------------------------------- #
-    print(f"[1/4] joint-training {levels}-level anytime LM "
+    print(f"[1/5] joint-training {levels}-level anytime LM "
           f"({args.train_steps} steps)...")
     opt = AdamW(lr=8e-3)
     state = init_train_state(model, cfg, opt, jax.random.PRNGKey(0))
@@ -71,11 +75,11 @@ def main():
     for k in range(1, levels + 1):
         logits, _ = model.train_logits(state.params, evalb, level=k)
         accs.append(float(token_accuracy(logits, evalb["labels"])))
-    print(f"[2/4] level accuracies: "
+    print(f"[2/5] level accuracies: "
           + " ".join(f"L{k + 1}={a:.3f}" for k, a in enumerate(accs)))
 
     # 3. ALERT serving loop ------------------------------------------ #
-    print("[3/4] profiling levels + starting ALERT loop...")
+    print("[3/5] profiling levels + starting ALERT loop...")
     engine = ServeEngine(model, max_len=32, batch_size=4)
     server = AlertServer(engine, state.params, accs,
                          Goal.MAXIMIZE_ACCURACY, prompt_len=8,
@@ -115,7 +119,7 @@ def main():
         now += r.latency
 
     # 4. report ------------------------------------------------------- #
-    print("[4/4] results:")
+    print("[4/5] results:")
     for phase, name in ((False, "loose-deadline"), (True, "tight-deadline")):
         rs = [r for t, r in results if t == phase]
         if not rs:
@@ -132,6 +136,45 @@ def main():
     assert lv_tight <= lv_loose + 1e-9, \
         "ALERT should drop levels under tight deadlines"
     print("OK: ALERT adapted the anytime level to the deadline regime.")
+
+    # 5. churning heterogeneous mini-fleet -------------------------- #
+    from repro.serving.alert_server import FleetAlertServer
+
+    print("[5/5] fleet: 3 lanes, mixed goals, churn between ticks...")
+    fleet = FleetAlertServer(engine, state.params, accs,
+                             Goal.MAXIMIZE_ACCURACY, n_streams=3,
+                             profile_iters=1, gen_tokens=4)
+    budget = float(np.median(fleet.table.run_power)) * loose_dl * 1.5
+    c_max = Constraints(deadline=loose_dl, energy_goal=budget)
+    c_min = Constraints(deadline=loose_dl, accuracy_goal=min(accs) + 0.02,
+                        energy_goal=budget)
+    # lane 1 switches tenancy mid-run: retire the max-accuracy stream,
+    # admit a minimize-energy one in its place (recycled lane, no retrace)
+    fleet.retire(1)
+    lane = fleet.admit(goal=Goal.MINIMIZE_ENERGY)
+    assert lane == 1
+    prompt = np.asarray(data.batch_at(30_000)["tokens"][:4, :8])
+    served = {0: [], 1: [], 2: []}
+    for tick in range(6):
+        outs = fleet.serve_tick([prompt] * 3, [c_max, c_min, c_max])
+        for s, o in enumerate(outs):
+            if o is not None:
+                served[s].append(o)
+    _, n_sel = fleet.scoring.n_compiles()
+    for s, rs in served.items():
+        goal = "min-energy" if s == lane else "max-accuracy"
+        print(f"  lane {s} ({goal:12s}): n={len(rs)} "
+              f"mean_level={np.mean([r.level for r in rs]):.2f} "
+              f"energy={np.mean([r.energy for r in rs]):.1f}J "
+              f"acc={np.mean([r.accuracy for r in rs]):.3f}")
+    print(f"  scoring executables compiled: {n_sel} "
+          "(mixed goals + churn, one masked pass per tick)")
+    assert n_sel == 1, "fleet churn must not re-trace the engine"
+    e_min = np.mean([r.energy for r in served[lane]])
+    e_max = np.mean([r.energy for s, rs in served.items() if s != lane
+                     for r in rs])
+    print(f"OK: min-energy tenant averaged {e_min:.1f}J vs "
+          f"{e_max:.1f}J for max-accuracy tenants.")
 
 
 if __name__ == "__main__":

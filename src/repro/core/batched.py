@@ -20,6 +20,16 @@ selection Eq. 4/5 with Section 3.3 relaxation) is evaluated here for
 * Selection is a masked argmin/argmax over the ``[S, K, L]`` grid with the
   paper's relaxation priority (latency > accuracy > power) folded in as a
   branch-free ``where`` between the feasible pick and the relaxed pick.
+* Fleets need not be homogeneous: :meth:`BatchedAlertEngine.select` takes
+  per-stream goal codes (``goal_kind`` — Eq. 4 lanes and Eq. 5 lanes mixed
+  in one call), per-stream goal values, and an ``active`` lane mask.  Both
+  optimisation branches are evaluated on the shared estimation grid and the
+  per-lane branch is a ``where`` on the goal code; dead lanes are sanitised
+  at the top of the traced function (their state may be garbage or NaN
+  without perturbing live lanes) and forced to a deterministic null pick.
+  Because goal codes and the mask are runtime arrays, streams can join,
+  leave, and switch goals every tick without a single re-trace
+  (DESIGN.md §5).
 
 Numerics: scoring runs in float64 under jax's *scoped* ``enable_x64`` (the
 global flag is never touched), which makes the engine's decisions
@@ -35,6 +45,7 @@ call.  Tensor layout details: DESIGN.md §4.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 import jax
@@ -54,6 +65,26 @@ RELAXED_POWER = 2       # max-accuracy task: energy budget unreachable
 RELAXED_NAMES = {RELAXED_NONE: "", RELAXED_ACCURACY: "accuracy",
                  RELAXED_POWER: "power"}
 
+# Per-stream goal codes for heterogeneous fleets (``goal_kind`` lanes).
+GOAL_MIN_ENERGY = 0     # Eq. 4: argmin energy s.t. accuracy
+GOAL_MAX_ACCURACY = 1   # Eq. 5: argmax accuracy s.t. energy
+
+
+def goal_codes(goals) -> np.ndarray:
+    """Encode :class:`~repro.core.controller.Goal` values (or raw int
+    codes) as an int64 ``goal_kind`` vector for :meth:`select`.  Numeric
+    arrays pass through without a per-lane Python loop — this sits on the
+    per-tick hot path of fleet callers."""
+    from repro.core.controller import Goal  # avoid import cycle
+
+    arr = np.asarray(goals)
+    if arr.dtype != object:
+        return np.atleast_1d(arr).astype(np.int64)
+    return np.asarray([
+        (GOAL_MIN_ENERGY if g is Goal.MINIMIZE_ENERGY else GOAL_MAX_ACCURACY)
+        if isinstance(g, Goal) else int(g)
+        for g in np.atleast_1d(arr)], dtype=np.int64)
+
 
 def _row_argmin(x):
     """First-occurrence argmin along the last axis.
@@ -62,17 +93,13 @@ def _row_argmin(x):
     vectorised min + mask arithmetic: XLA CPU lowers variadic argmin/argmax
     reduces to scalar loops, which at [S, K*L] costs ~10x the whole
     estimation pass.  This formulation is a plain reduce + elementwise ops.
+    The index arithmetic stays int32 (column counts are tiny) so the
+    second reduce moves half the bytes of the f64 grid even under x64.
     """
     c = x.shape[-1]
     mask = x == jnp.min(x, axis=-1, keepdims=True)
-    return c - jnp.max(mask * (c - jnp.arange(c)), axis=-1)
-
-
-def _row_argmax(x):
-    """First-occurrence argmax along the last axis (see ``_row_argmin``)."""
-    c = x.shape[-1]
-    mask = x == jnp.max(x, axis=-1, keepdims=True)
-    return c - jnp.max(mask * (c - jnp.arange(c)), axis=-1)
+    rev = (c - jnp.arange(c)).astype(jnp.int32)
+    return c - jnp.max(mask * rev, axis=-1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,13 +141,15 @@ class BatchedAlertEngine:
     same compiled executable; nothing in the hot path re-traces.
 
     Parameters mirror :class:`repro.core.controller.AlertController`:
-    ``goal`` picks Eq. 4 vs Eq. 5, ``overhead`` is subtracted from each
-    stream's deadline inside :meth:`select` (Section 3.2.1 step 2), and
+    ``goal`` picks Eq. 4 vs Eq. 5 for every lane that does not override it
+    (pass ``goal=None`` for an engine that *requires* per-stream
+    ``goal_kind`` codes), ``overhead`` is subtracted from each stream's
+    deadline inside :meth:`select` (Section 3.2.1 step 2), and
     ``paper_faithful_energy`` switches Eq. 9 verbatim vs the beyond-paper
     E[min(t, T)] estimator.
     """
 
-    def __init__(self, table: ProfileTable, goal, *,
+    def __init__(self, table: ProfileTable, goal=None, *,
                  overhead: float = 0.0,
                  paper_faithful_energy: bool = True):
         from repro.core.controller import Goal  # avoid import cycle
@@ -141,6 +170,11 @@ class BatchedAlertEngine:
 
         self._estimate_jit = jax.jit(self._estimate_impl)
         self._select_jit = jax.jit(self._select_impl)
+        self._select_pick_jit = jax.jit(
+            functools.partial(self._select_impl, predictions=False))
+        self._select_hetero_jit = jax.jit(self._select_hetero_impl)
+        self._select_hetero_pick_jit = jax.jit(
+            functools.partial(self._select_hetero_impl, predictions=False))
 
     @staticmethod
     def _staircase_weight_matrix(table: ProfileTable) -> np.ndarray:
@@ -172,8 +206,20 @@ class BatchedAlertEngine:
     # ------------------------------------------------------------------ #
     # traced implementations                                             #
     # ------------------------------------------------------------------ #
-    def _estimate_impl(self, mu, sd, phi, deadline):
-        """[S] state vectors -> per-cell [S, K, L] predictions."""
+    def _estimate_impl(self, mu, sd, phi, deadline, active=None):
+        """[S] state vectors -> per-cell [S, K, L] predictions.
+
+        ``active`` masks dead lanes: their inputs are replaced with benign
+        constants *before* any arithmetic (a retired stream's slot may hold
+        stale or NaN state) and their output rows are zeroed.  ``None``
+        (the homogeneous path) skips both rewrites, so the lockstep graphs
+        are bit-identical to the unmasked PR-1 engine.
+        """
+        if active is not None:
+            mu = jnp.where(active, mu, 1.0)
+            sd = jnp.where(active, sd, 0.1)
+            phi = jnp.where(active, phi, 0.25)
+            deadline = jnp.where(active, deadline, 1.0)
         lat = self._c_latency[None, :, :]                # [1, K, L]
         t = deadline[:, None, None]                      # [S, 1, 1]
         mu_ = mu[:, None, None]
@@ -206,10 +252,81 @@ class BatchedAlertEngine:
             t_run = jnp.clip(t_run, 0.0, t)
         phi_ = phi[:, None, None]
         energy = caps * t_run + phi_ * caps * jnp.maximum(t - t_run, 0.0)
-        return lat_mean, lat_std, accuracy, energy, p_finish
+        out = (lat_mean, lat_std, accuracy, energy, p_finish)
+        if active is not None:
+            a3 = active[:, None, None]
+            out = tuple(jnp.where(a3, x, 0.0) for x in out)
+        return out
 
-    def _select_impl(self, mu, sd, phi, deadline, goal_val):
-        """Fused estimate + Eq. 4/5 pick with Section 3.3 relaxation."""
+    @staticmethod
+    def _score_min_energy(acc_f, en_f, goal_val):
+        """Eq. 4 score rows: argmin of the result IS the pick.
+
+        argmin e s.t. q_hat >= Q_goal — the latency constraint is folded
+        into q_hat (a high miss probability drags expected accuracy to
+        q_fail).  Relaxation: sacrifice the accuracy goal but stay
+        latency-aware via argmax expected accuracy.
+
+        One fused score, no argmin here: feasible rows rank by energy
+        among feasible cells; rows with no feasible cell rank by negated
+        accuracy, which is argmax accuracy with the identical
+        first-occurrence tie-break.  Picks are bit-identical to the
+        two-argmin form (and to the NumPy reference) at a fraction of the
+        reduction passes — selection is bandwidth-bound at fleet sizes,
+        and deferring the single shared argmin lets the heterogeneous
+        path rank BOTH goal types with one reduce.
+        """
+        feas = acc_f >= goal_val[:, None]
+        any_f = feas.any(axis=1)
+        score = jnp.where(any_f[:, None],
+                          jnp.where(feas, en_f, jnp.inf), -acc_f)
+        relaxed = jnp.where(any_f, RELAXED_NONE, RELAXED_ACCURACY)
+        return score, any_f, relaxed
+
+    @staticmethod
+    def _score_max_accuracy(acc_f, en_f, goal_val):
+        """Eq. 5 score rows: argmin of the result IS the pick.
+
+        argmax q_hat s.t. e <= E_goal; equal-accuracy cells tie-break to
+        lower energy.  Power/energy is the lowest-priority constraint —
+        relaxation drops it first: the fallback is the same lexicographic
+        pick with the feasibility mask removed, so both cases share one
+        max + one tie.
+
+        The tie test ``best - acc <= 1e-12`` equals the reference's
+        ``isclose(acc, best, rtol=0, atol=1e-12)`` for every finite cell
+        (``acc <= best`` by construction); -inf-masked cells never tie
+        (``best - (-inf) = inf``), and the all-infeasible row where both
+        would be -inf uses the unmasked accuracies instead.
+        """
+        feas = en_f <= goal_val[:, None]
+        any_f = feas.any(axis=1)
+        acc_use = jnp.where(feas | ~any_f[:, None], acc_f, -jnp.inf)
+        best = acc_use.max(axis=1, keepdims=True)
+        score = jnp.where(best - acc_use <= 1e-12, en_f, jnp.inf)
+        relaxed = jnp.where(any_f, RELAXED_NONE, RELAXED_POWER)
+        return score, any_f, relaxed
+
+    def _gather_pick(self, s, kl, pick, lat_mean, acc, energy, any_f,
+                     relaxed, predictions=True):
+        if not predictions:
+            # Pick-only mode: fleet callers re-derive outcomes from real
+            # delivery, so the three [S, K*L] prediction gathers are pure
+            # waste on their tick — skip them (fields come back zero).
+            z = jnp.zeros(s)
+            return (pick // self._l, pick % self._l, z, z, z, any_f,
+                    relaxed)
+        # One-hot gathers (XLA CPU gathers are row-by-row; this is one
+        # elementwise mul + reduce).
+        onehot = jnp.arange(kl) == pick[:, None]
+        gather = lambda a: jnp.sum(a.reshape(s, kl) * onehot, axis=1)
+        return (pick // self._l, pick % self._l, gather(lat_mean),
+                gather(acc), gather(energy), any_f, relaxed)
+
+    def _select_impl(self, mu, sd, phi, deadline, goal_val, *,
+                     predictions=True):
+        """Fused estimate + Eq. 4/5 pick with Section 3.3 relaxation
+        (homogeneous fast path: the goal is a compile-time branch)."""
         t_eff = jnp.maximum(deadline - self.overhead, 1e-9)
         lat_mean, lat_std, acc, energy, p_fin = self._estimate_impl(
             mu, sd, phi, t_eff)
@@ -217,42 +334,79 @@ class BatchedAlertEngine:
         kl = self._k * self._l
         acc_f = acc.reshape(s, kl)
         en_f = energy.reshape(s, kl)
-
         if self._minimize_energy:
-            # Eq. 4: argmin e s.t. q_hat >= Q_goal.  The latency constraint
-            # is folded into q_hat (a high miss probability drags expected
-            # accuracy to q_fail).  Relaxation: sacrifice the accuracy goal
-            # but stay latency-aware via argmax expected accuracy.
-            feas = acc_f >= goal_val[:, None]
-            any_f = feas.any(axis=1)
-            pick_f = _row_argmin(jnp.where(feas, en_f, jnp.inf))
-            pick_r = _row_argmax(acc_f)
-            relaxed = jnp.where(any_f, RELAXED_NONE, RELAXED_ACCURACY)
+            score, any_f, relaxed = self._score_min_energy(acc_f, en_f,
+                                                           goal_val)
         else:
-            # Eq. 5: argmax q_hat s.t. e <= E_goal; equal-accuracy cells
-            # tie-break to lower energy.  Power/energy is the lowest-
-            # priority constraint — relaxation drops it first.
-            feas = en_f <= goal_val[:, None]
-            any_f = feas.any(axis=1)
-            acc_m = jnp.where(feas, acc_f, -jnp.inf)
-            best = acc_m.max(axis=1, keepdims=True)
-            tie = jnp.where(jnp.isclose(acc_m, best, rtol=0.0, atol=1e-12),
-                            en_f, jnp.inf)
-            pick_f = _row_argmin(tie)
-            best_r = acc_f.max(axis=1, keepdims=True)
-            tie_r = jnp.where(
-                jnp.isclose(acc_f, best_r, rtol=0.0, atol=1e-12),
-                en_f, jnp.inf)
-            pick_r = _row_argmin(tie_r)
-            relaxed = jnp.where(any_f, RELAXED_NONE, RELAXED_POWER)
+            score, any_f, relaxed = self._score_max_accuracy(acc_f, en_f,
+                                                             goal_val)
+        return self._gather_pick(s, kl, _row_argmin(score), lat_mean, acc,
+                                 energy, any_f, relaxed,
+                                 predictions=predictions)
 
-        pick = jnp.where(any_f, pick_f, pick_r)
-        # One-hot gathers (XLA CPU gathers are row-by-row; this is one
-        # elementwise mul + reduce).
-        onehot = jnp.arange(kl) == pick[:, None]
-        gather = lambda a: jnp.sum(a.reshape(s, kl) * onehot, axis=1)
-        return (pick // self._l, pick % self._l, gather(lat_mean),
-                gather(acc), gather(energy), any_f, relaxed)
+    def _select_hetero_impl(self, mu, sd, phi, deadline, acc_goal, en_goal,
+                            goal_kind, active, *, predictions=True):
+        """Masked heterogeneous select: Eq. 4 lanes and Eq. 5 lanes mixed
+        in one pass, dead lanes sanitised and pinned to a null pick.
+
+        Estimation (the erf grid — the expensive part) is shared by both
+        branches; the per-lane goal is a branch-free ``where`` on
+        ``goal_kind``.  All of ``goal_kind``/``active``/goal values are
+        runtime arrays, so churn and goal changes never re-trace.
+
+        Dead-lane handling is all ``[S]``-sized: inputs are sanitised
+        before the grid math (so garbage can't generate NaNs that stall
+        the lane later) and the gathered outputs are zeroed at the end —
+        no ``[S, K, L]`` masking pass anywhere.
+        """
+        mu = jnp.where(active, mu, 1.0)
+        sd = jnp.where(active, sd, 0.1)
+        phi = jnp.where(active, phi, 0.25)
+        deadline = jnp.where(active, deadline, 1.0)
+        acc_goal = jnp.where(active, acc_goal, 0.0)
+        en_goal = jnp.where(active, en_goal, 0.0)
+        t_eff = jnp.maximum(deadline - self.overhead, 1e-9)
+        lat_mean, lat_std, acc, energy, p_fin = self._estimate_impl(
+            mu, sd, phi, t_eff)
+        s = acc.shape[0]
+        kl = self._k * self._l
+        acc_f = acc.reshape(s, kl)
+        en_f = energy.reshape(s, kl)
+        is_min = goal_kind == GOAL_MIN_ENERGY
+        is_min_ = is_min[:, None]
+        # Unified feasibility: each lane's rows already follow its own
+        # goal's constraint, so ONE mask, ONE any-reduce, and ONE max
+        # serve the whole mixed fleet — vs the homogeneous fast path the
+        # only extra reduce is the Eq. 5 best-accuracy max; everything
+        # else merges into the same fused elementwise chain.  Per-lane
+        # results are bit-identical to the per-goal score builders
+        # (`_score_min_energy` / `_score_max_accuracy`).
+        feas = jnp.where(is_min_, acc_f >= acc_goal[:, None],
+                         en_f <= en_goal[:, None])
+        any_f = feas.any(axis=1)
+        any_ = any_f[:, None]
+        # Eq. 5 lexicographic stage (see _score_max_accuracy); for Eq. 4
+        # lanes the max is computed but unused.
+        acc_use = jnp.where(feas | ~any_, acc_f, -jnp.inf)
+        best = acc_use.max(axis=1, keepdims=True)
+        sc_a = jnp.where(best - acc_use <= 1e-12, en_f, jnp.inf)
+        # Eq. 4 score (see _score_min_energy), merged per lane.
+        sc_e = jnp.where(any_, jnp.where(feas, en_f, jnp.inf), -acc_f)
+        pick = _row_argmin(jnp.where(is_min_, sc_e, sc_a))
+        relaxed = jnp.where(any_f, RELAXED_NONE,
+                            jnp.where(is_min, RELAXED_ACCURACY,
+                                      RELAXED_POWER))
+        # Dead lanes: deterministic null outputs (pick 0, infeasible-free).
+        pick = jnp.where(active, pick, 0)
+        any_f = any_f & active
+        relaxed = jnp.where(active, relaxed, RELAXED_NONE)
+        i, j, lat, acc_p, en_p, any_f, relaxed = self._gather_pick(
+            s, kl, pick, lat_mean, acc, energy, any_f, relaxed,
+            predictions=predictions)
+        if predictions:
+            zero = lambda x: jnp.where(active, x, 0.0)
+            lat, acc_p, en_p = zero(lat), zero(acc_p), zero(en_p)
+        return (i, j, lat, acc_p, en_p, any_f, relaxed)
 
     # ------------------------------------------------------------------ #
     # public API (numpy in, numpy out; float64 via scoped x64)           #
@@ -262,42 +416,106 @@ class BatchedAlertEngine:
         a = np.asarray(x, np.float64)
         return np.broadcast_to(a, (s,)) if a.ndim == 0 else a
 
-    def estimate(self, mu, sigma, phi, deadline) -> EstimateBatch:
+    def estimate(self, mu, sigma, phi, deadline, *,
+                 active=None) -> EstimateBatch:
         """Score every (stream, model, power) cell.
 
         ``deadline`` is the effective deadline (overhead already applied by
         the caller, matching ``AlertController.estimate``); scalars
-        broadcast across streams.
+        broadcast across streams.  ``active`` (optional ``[S]`` bool mask)
+        sanitises dead lanes and zeroes their output rows.
         """
         t = np.asarray(deadline, np.float64)
         s = t.shape[0] if t.ndim else 1
         t = self._vec(t, s)
+        args = [self._vec(mu, s), np.maximum(self._vec(sigma, s), 1e-6),
+                self._vec(phi, s), t]
+        if active is not None:
+            args.append(np.broadcast_to(np.asarray(active, bool), (s,)))
         with enable_x64():
-            out = self._estimate_jit(
-                self._vec(mu, s), np.maximum(self._vec(sigma, s), 1e-6),
-                self._vec(phi, s), t)
+            out = self._estimate_jit(*args)
         return EstimateBatch(*(np.asarray(o) for o in out))
 
+    def _resolve_goal_kind(self, goal_kind, s: int) -> np.ndarray:
+        if goal_kind is not None:
+            if isinstance(goal_kind, np.ndarray) and \
+                    goal_kind.dtype == np.int64:
+                return np.broadcast_to(goal_kind, (s,))  # hot path: no copy
+            return np.broadcast_to(goal_codes(goal_kind), (s,))
+        if self.goal is None:
+            raise ValueError("engine has no default goal: pass goal_kind")
+        code = GOAL_MIN_ENERGY if self._minimize_energy \
+            else GOAL_MAX_ACCURACY
+        return np.full(s, code, dtype=np.int64)
+
     def select(self, mu, sigma, phi, deadline, *,
-               accuracy_goal=None, energy_goal=None) -> DecisionBatch:
-        """One decision per stream (Eq. 4 or Eq. 5 per the engine's goal).
+               accuracy_goal=None, energy_goal=None,
+               goal_kind=None, active=None,
+               predictions: bool = True) -> DecisionBatch:
+        """One decision per stream.
+
+        ``predictions=False`` skips the per-pick prediction gathers (the
+        returned latency/accuracy/energy fields are zero) — fleet callers
+        that re-derive outcomes from real delivery use this leaner pass;
+        indices, feasibility, and relax codes are identical either way.
 
         ``deadline`` is the raw per-stream T_goal; the engine subtracts its
-        configured ``overhead`` (Section 3.2.1 step 2).  Min-energy engines
-        need ``accuracy_goal`` (per-stream effective Q_goal, e.g. from the
+        configured ``overhead`` (Section 3.2.1 step 2).
+
+        Homogeneous fleets (no ``goal_kind``/``active``, engine built with
+        a ``goal``) dispatch to the PR-1 fast path: min-energy engines need
+        ``accuracy_goal`` (per-stream effective Q_goal, e.g. from the
         windowed-goal bank); max-accuracy engines need ``energy_goal``.
+
+        Heterogeneous/churning fleets pass ``goal_kind`` (``[S]`` int codes
+        ``GOAL_MIN_ENERGY``/``GOAL_MAX_ACCURACY``, or a sequence of
+        :class:`~repro.core.controller.Goal`) and/or ``active`` (``[S]``
+        bool lane mask).  Every *active* Eq. 4 lane needs a finite
+        ``accuracy_goal`` entry and every active Eq. 5 lane a finite
+        ``energy_goal`` entry; the other vector may be omitted (zero-filled)
+        when no lane of that kind is active.  Dead lanes may hold arbitrary
+        garbage in every input vector and come back with a deterministic
+        null decision (indices 0, zero predictions, ``feasible=False`` off,
+        ``relaxed_code=RELAXED_NONE``).
         """
         t = np.asarray(deadline, np.float64)
         s = t.shape[0] if t.ndim else 1
-        goal_val = accuracy_goal if self._minimize_energy else energy_goal
-        if goal_val is None:
-            need = "accuracy_goal" if self._minimize_energy else \
-                "energy_goal"
-            raise ValueError(f"{self.goal} task needs {need}")
-        with enable_x64():
-            out = self._select_jit(
-                self._vec(mu, s), np.maximum(self._vec(sigma, s), 1e-6),
-                self._vec(phi, s), self._vec(t, s), self._vec(goal_val, s))
+        if goal_kind is None and active is None and self.goal is not None:
+            goal_val = accuracy_goal if self._minimize_energy \
+                else energy_goal
+            if goal_val is None:
+                need = "accuracy_goal" if self._minimize_energy else \
+                    "energy_goal"
+                raise ValueError(f"{self.goal} task needs {need}")
+            fn = self._select_jit if predictions else self._select_pick_jit
+            with enable_x64():
+                out = fn(
+                    self._vec(mu, s),
+                    np.maximum(self._vec(sigma, s), 1e-6),
+                    self._vec(phi, s), self._vec(t, s),
+                    self._vec(goal_val, s))
+        else:
+            gk = self._resolve_goal_kind(goal_kind, s)
+            act = np.ones(s, bool) if active is None else \
+                np.broadcast_to(np.asarray(active, bool), (s,))
+            if accuracy_goal is None and \
+                    np.any(act & (gk == GOAL_MIN_ENERGY)):
+                raise ValueError("active minimize-energy lanes need "
+                                 "accuracy_goal")
+            if energy_goal is None and \
+                    np.any(act & (gk == GOAL_MAX_ACCURACY)):
+                raise ValueError("active maximize-accuracy lanes need "
+                                 "energy_goal")
+            ag = self._vec(0.0 if accuracy_goal is None else accuracy_goal,
+                           s)
+            eg = self._vec(0.0 if energy_goal is None else energy_goal, s)
+            fn = self._select_hetero_jit if predictions else \
+                self._select_hetero_pick_jit
+            with enable_x64():
+                out = fn(
+                    self._vec(mu, s),
+                    np.maximum(self._vec(sigma, s), 1e-6),
+                    self._vec(phi, s), self._vec(t, s), ag, eg, gk, act)
         i, j, lat, acc, en, feas, relaxed = (np.asarray(o) for o in out)
         return DecisionBatch(model_index=i, power_index=j,
                              predicted_latency=lat, predicted_accuracy=acc,
@@ -306,9 +524,15 @@ class BatchedAlertEngine:
 
     def n_compiles(self) -> tuple[int, int]:
         """(estimate, select) jit-cache sizes — 1 each means every call
-        after warmup reused the compiled executable (no re-tracing)."""
+        after warmup reused the compiled executable (no re-tracing).  The
+        select count sums the homogeneous/heterogeneous and full/pick-only
+        executables, so a fleet that sticks to one path still reads 1
+        while it churns."""
         return (self._estimate_jit._cache_size(),
-                self._select_jit._cache_size())
+                self._select_jit._cache_size()
+                + self._select_pick_jit._cache_size()
+                + self._select_hetero_jit._cache_size()
+                + self._select_hetero_pick_jit._cache_size())
 
 
 class WindowedGoalBank:
@@ -337,6 +561,32 @@ class WindowedGoalBank:
             self._count[changed] = 0
             self._pos[changed] = 0
             self.goal = np.where(changed, new, self.goal)
+
+    def reset_lanes(self, lanes, goal=None) -> None:
+        """Recycle ``lanes`` for newly admitted streams: clear their window
+        history and (optionally) install a new per-lane goal — even one
+        equal to the departed tenant's, which ``set_goals`` would keep."""
+        lanes = np.asarray(lanes)
+        if goal is not None:
+            self.goal[lanes] = np.asarray(goal, dtype=np.float64)
+        self._buf[lanes] = 0.0
+        self._count[lanes] = 0
+        self._pos[lanes] = 0
+
+    def grow(self, n_streams: int, goal_fill: float = 0.0) -> None:
+        """Extend the bank to ``n_streams`` lanes; new lanes start with a
+        fresh window and ``goal_fill`` (set the real goal on admission)."""
+        extra = int(n_streams) - self.goal.shape[0]
+        if extra <= 0:
+            return
+        self.goal = np.concatenate(
+            [self.goal, np.full(extra, goal_fill, dtype=np.float64)])
+        self._buf = np.concatenate(
+            [self._buf, np.zeros((extra, self._buf.shape[1]))])
+        self._count = np.concatenate(
+            [self._count, np.zeros(extra, dtype=np.int64)])
+        self._pos = np.concatenate(
+            [self._pos, np.zeros(extra, dtype=np.int64)])
 
     def record(self, delivered: np.ndarray,
                mask: np.ndarray | None = None) -> None:

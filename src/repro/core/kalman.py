@@ -133,6 +133,17 @@ class IdlePowerFilter:
 _BANK_STEPS: dict = {}
 
 
+def _masked_positive(values, mask, what: str) -> np.ndarray:
+    """Shared bank-observation preamble: require strictly positive values
+    on the masked-in lanes, and give masked-out lanes a harmless positive
+    divisor (they still flow through the fused update, discarded by the
+    final ``where``)."""
+    v = np.asarray(values, np.float64)
+    if np.any(v[mask] <= 0.0):
+        raise ValueError(f"{what} must be positive")
+    return np.where(mask, v, 1.0)
+
+
 def _jit_f64(fn):
     """jit ``fn`` and dispatch it under scoped x64 so the bank updates run
     in float64 (matching the scalar filters) without flipping global jax
@@ -182,11 +193,56 @@ def _idle_bank_step(phi, var, idle, active, mask, s, v):
     return (jnp.where(mask, phi_new, phi), jnp.where(mask, var_new, var))
 
 
+def _fused_fleet_step(mu, sigma, gain, q, obs, prof, miss, mask,
+                      q0, alpha, r, miss_inflation,
+                      phi, var, idle, active, s_noise, v_noise):
+    """Both per-tick bank recurrences (Eq. 6 + Eq. 8) in ONE jitted graph —
+    per-stream math identical to the standalone steps, one dispatch."""
+    slow = _slowdown_bank_step(mu, sigma, gain, q, obs, prof, miss, mask,
+                               q0, alpha, r, miss_inflation)
+    idle_out = _idle_bank_step(phi, var, idle, active, mask,
+                               s_noise, v_noise)
+    return slow + idle_out
+
+
+def observe_fleet(slow: "SlowdownFilterBank", idle: "IdlePowerFilterBank",
+                  observed_latency, profiled_latency, *,
+                  deadline_missed=None, idle_power, active_power,
+                  mask=None) -> None:
+    """One fused masked update for BOTH banks (the fleet tick's entire
+    feedback step): same per-lane results, bit for bit, as calling
+    ``slow.observe(...)`` then ``idle.observe(...)``, at a single jit
+    dispatch — the dispatch overhead, not the [S] math, dominates the
+    standalone calls at fleet sizes."""
+    s = slow.mu.shape[0]
+    miss = np.zeros(s, bool) if deadline_missed is None \
+        else np.asarray(deadline_missed, bool)
+    m = np.ones(s, bool) if mask is None else np.asarray(mask, bool)
+    prof = _masked_positive(profiled_latency, m, "profiled_latency")
+    active = _masked_positive(active_power, m, "active_power")
+    step = _jit_f64(_fused_fleet_step)
+    (slow.mu, slow.sigma, slow.gain, slow.process_noise,
+     idle.phi, idle.variance) = step(
+        slow.mu, slow.sigma, slow.gain, slow.process_noise,
+        np.asarray(observed_latency, np.float64), prof, miss, m,
+        slow.process_noise_floor, slow.alpha, slow.meas_noise,
+        slow.miss_inflation,
+        idle.phi, idle.variance, np.asarray(idle_power, np.float64),
+        active, idle.process_noise, idle.meas_noise)
+    slow.n_updates += m
+    idle.n_updates += m
+
+
 class SlowdownFilterBank:
     """Struct-of-arrays :class:`SlowdownFilter` over S streams (Eq. 6).
 
     One fused update advances every stream; ``mask`` lets streams that had
-    no measurement this tick keep their state untouched.
+    no measurement this tick keep their state untouched.  For churning
+    fleets the bank doubles as a lane pool: :meth:`reset_lanes` recycles a
+    departed stream's lane for a new tenant (fresh filter state, no
+    re-trace — the array shape is unchanged), while :meth:`grow` /
+    :meth:`shrink` change capacity itself (a new ``[S]`` shape, so the
+    next fused update traces once at the new size).
     """
 
     def __init__(self, n_streams: int, *, mu0: float = 1.0,
@@ -194,6 +250,7 @@ class SlowdownFilterBank:
                  meas_noise: float = 1e-3, process_noise_floor: float = 0.1,
                  alpha: float = 0.3, miss_inflation: float = 0.2):
         s = n_streams
+        self.mu0, self.sigma0, self.gain0 = mu0, sigma0, gain0
         self.mu = np.full(s, mu0, dtype=np.float64)
         self.sigma = np.full(s, sigma0, dtype=np.float64)
         self.gain = np.full(s, gain0, dtype=np.float64)
@@ -206,6 +263,46 @@ class SlowdownFilterBank:
         self.n_updates = np.zeros(s, dtype=np.int64)
         self._step = _jit_f64(_slowdown_bank_step)
 
+    @property
+    def n_streams(self) -> int:
+        return self.mu.shape[0]
+
+    def reset_lanes(self, lanes) -> None:
+        """Reinitialise ``lanes`` to the filter priors (stream admission)."""
+        lanes = np.asarray(lanes)
+        if not self.mu.flags.writeable:  # observe() returns jax-backed views
+            self.mu, self.sigma, self.gain, self.process_noise = (
+                self.mu.copy(), self.sigma.copy(), self.gain.copy(),
+                self.process_noise.copy())
+        self.mu[lanes] = self.mu0
+        self.sigma[lanes] = self.sigma0
+        self.gain[lanes] = self.gain0
+        self.process_noise[lanes] = self.process_noise_floor
+        self.n_updates[lanes] = 0
+
+    def grow(self, n_streams: int) -> None:
+        """Extend capacity to ``n_streams``; new lanes hold fresh priors."""
+        extra = int(n_streams) - self.n_streams
+        if extra <= 0:
+            return
+        self.mu = np.concatenate([self.mu, np.full(extra, self.mu0)])
+        self.sigma = np.concatenate([self.sigma,
+                                     np.full(extra, self.sigma0)])
+        self.gain = np.concatenate([self.gain, np.full(extra, self.gain0)])
+        self.process_noise = np.concatenate(
+            [self.process_noise, np.full(extra, self.process_noise_floor)])
+        self.n_updates = np.concatenate(
+            [self.n_updates, np.zeros(extra, dtype=np.int64)])
+
+    def shrink(self, n_streams: int) -> None:
+        """Truncate capacity to the first ``n_streams`` lanes."""
+        s = int(n_streams)
+        self.mu = self.mu[:s].copy()
+        self.sigma = self.sigma[:s].copy()
+        self.gain = self.gain[:s].copy()
+        self.process_noise = self.process_noise[:s].copy()
+        self.n_updates = self.n_updates[:s].copy()
+
     def observe(self, observed_latency: np.ndarray,
                 profiled_latency: np.ndarray,
                 deadline_missed: np.ndarray | None = None,
@@ -214,12 +311,7 @@ class SlowdownFilterBank:
         miss = np.zeros(s, bool) if deadline_missed is None \
             else np.asarray(deadline_missed, bool)
         m = np.ones(s, bool) if mask is None else np.asarray(mask, bool)
-        prof = np.asarray(profiled_latency, np.float64)
-        if np.any(prof[m] <= 0.0):
-            raise ValueError("profiled_latency must be positive")
-        # Masked-out lanes still flow through the fused update; give them a
-        # harmless positive divisor.
-        prof = np.where(m, prof, 1.0)
+        prof = _masked_positive(profiled_latency, m, "profiled_latency")
         self.mu, self.sigma, self.gain, self.process_noise = self._step(
             self.mu, self.sigma, self.gain, self.process_noise,
             np.asarray(observed_latency, np.float64), prof, miss, m,
@@ -234,11 +326,13 @@ class SlowdownFilterBank:
 
 
 class IdlePowerFilterBank:
-    """Struct-of-arrays :class:`IdlePowerFilter` over S streams (Eq. 8)."""
+    """Struct-of-arrays :class:`IdlePowerFilter` over S streams (Eq. 8),
+    with the same lane-pool operations as :class:`SlowdownFilterBank`."""
 
     def __init__(self, n_streams: int, *, phi0: float = 0.3,
                  variance0: float = 0.01, process_noise: float = 1e-4,
                  meas_noise: float = 1e-3):
+        self.phi0, self.variance0 = phi0, variance0
         self.phi = np.full(n_streams, phi0, dtype=np.float64)
         self.variance = np.full(n_streams, variance0, dtype=np.float64)
         self.process_noise = process_noise
@@ -246,14 +340,39 @@ class IdlePowerFilterBank:
         self.n_updates = np.zeros(n_streams, dtype=np.int64)
         self._step = _jit_f64(_idle_bank_step)
 
+    @property
+    def n_streams(self) -> int:
+        return self.phi.shape[0]
+
+    def reset_lanes(self, lanes) -> None:
+        lanes = np.asarray(lanes)
+        if not self.phi.flags.writeable:  # observe() returns jax-backed views
+            self.phi, self.variance = self.phi.copy(), self.variance.copy()
+        self.phi[lanes] = self.phi0
+        self.variance[lanes] = self.variance0
+        self.n_updates[lanes] = 0
+
+    def grow(self, n_streams: int) -> None:
+        extra = int(n_streams) - self.n_streams
+        if extra <= 0:
+            return
+        self.phi = np.concatenate([self.phi, np.full(extra, self.phi0)])
+        self.variance = np.concatenate(
+            [self.variance, np.full(extra, self.variance0)])
+        self.n_updates = np.concatenate(
+            [self.n_updates, np.zeros(extra, dtype=np.int64)])
+
+    def shrink(self, n_streams: int) -> None:
+        s = int(n_streams)
+        self.phi = self.phi[:s].copy()
+        self.variance = self.variance[:s].copy()
+        self.n_updates = self.n_updates[:s].copy()
+
     def observe(self, idle_power: np.ndarray, active_power: np.ndarray,
                 mask: np.ndarray | None = None) -> np.ndarray:
         s = self.phi.shape[0]
         m = np.ones(s, bool) if mask is None else np.asarray(mask, bool)
-        active = np.asarray(active_power, np.float64)
-        if np.any(active[m] <= 0.0):
-            raise ValueError("active_power must be positive")
-        active = np.where(m, active, 1.0)
+        active = _masked_positive(active_power, m, "active_power")
         self.phi, self.variance = self._step(
             self.phi, self.variance, np.asarray(idle_power, np.float64),
             active, m, self.process_noise, self.meas_noise)

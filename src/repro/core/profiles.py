@@ -144,14 +144,35 @@ class ProfileTable:
         return self._staircase_cache
 
     def subset(self, indices: Sequence[int]) -> "ProfileTable":
+        """Restrict the table to ``indices`` (scheme ablations, per-tenant
+        candidate pools).
+
+        When every kept candidate's staircase prefix survives intact (the
+        common case — ablations drop whole anytime groups or keep whole
+        ones), the parent's padded staircase tensors are *shared* by row
+        slicing instead of rebuilt: one padded ``[K, M, L]`` allocation
+        serves the full table and every constraint grid derived from it.
+        A subset that cuts a group mid-prefix falls back to a lazy rebuild
+        (its staircases genuinely differ).
+        """
         idx = list(indices)
-        return ProfileTable(
+        sub = ProfileTable(
             candidates=[self.candidates[i] for i in idx],
             power_caps=self.power_caps,
             latency=self.latency[idx],
             run_power=self.run_power[idx],
             q_fail=self.q_fail,
         )
+        cache = getattr(self, "_staircase_cache", None)
+        if cache is not None:
+            kept = set(idx)
+            rows = self.staircase_rows()
+            if all(set(rows[i]) <= kept for i in idx):
+                object.__setattr__(sub, "_staircase_cache", StaircaseTensors(
+                    lvl_lat=cache.lvl_lat[idx], lvl_acc=cache.lvl_acc[idx],
+                    lvl_valid=cache.lvl_valid[idx],
+                    n_levels=cache.n_levels[idx]))
+        return sub
 
 
 def roofline_latency(flops: float, bytes_hbm: float, speed_fraction: float,

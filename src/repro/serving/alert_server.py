@@ -10,9 +10,13 @@ Two frontends share the profiling pass and the scoring engine:
 * :class:`AlertServer` — one request stream; its ``AlertController`` is the
   S=1 wrapper over :class:`~repro.core.batched.BatchedAlertEngine`.
 * :class:`FleetAlertServer` — S request streams multiplexed onto one
-  ServeEngine: per tick, ONE batched engine call scores every stream's
-  (model, power) grid, then the per-level compiled programs execute each
-  stream's pick and a fused filter-bank update absorbs all measurements.
+  ServeEngine: per tick, ONE batched engine call scores every live
+  stream's (model, power) grid (per-lane goal codes + active mask — the
+  tenants may mix Eq. 4 and Eq. 5 goals), then the per-level compiled
+  programs execute each stream's pick and a fused masked filter-bank
+  update absorbs all measurements.  Streams are admitted and retired
+  between ticks: lanes are recycled, not re-padded, so churn never
+  re-traces the scoring executable (DESIGN.md §5).
 
 Power on this host cannot be actuated (see DESIGN.md §2), so the power
 dimension is bookkeeping through the same PowerModel the profiles use; the
@@ -26,7 +30,9 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.batched import BatchedAlertEngine, WindowedGoalBank
+from repro.core.batched import (BatchedAlertEngine, GOAL_MAX_ACCURACY,
+                                GOAL_MIN_ENERGY, WindowedGoalBank,
+                                goal_codes)
 from repro.core.controller import AlertController, Constraints, Goal
 from repro.core.kalman import IdlePowerFilterBank, SlowdownFilterBank
 from repro.core.power import PowerModel
@@ -130,15 +136,25 @@ class AlertServer:
 
 
 class FleetAlertServer:
-    """S concurrent request streams, scored by one batched engine call.
+    """Concurrent request streams, scored by one batched engine call.
 
-    Each stream keeps its own Kalman state (slow-down xi, idle-power phi)
-    and windowed accuracy goal, held as struct-of-arrays filter banks.  A
-    ``serve_tick`` scores ALL streams' (model, power) grids in a single
-    jit-compiled pass, executes every stream's pick through the per-level
-    compiled programs, and absorbs all measurements with one fused bank
-    update — the controller overhead per stream shrinks with S, which is
-    the paper's overhead argument (0.6-1.7 % per input) at fleet scale.
+    Each stream keeps its own Kalman state (slow-down xi, idle-power phi),
+    windowed accuracy goal, and — unlike a lockstep fleet — its own *goal
+    type*: Eq. 4 (minimize-energy) and Eq. 5 (maximize-accuracy) tenants
+    share one engine call via per-lane ``goal_kind`` codes.  A
+    ``serve_tick`` scores ALL live streams' (model, power) grids in a
+    single jit-compiled pass, executes every live stream's pick through
+    the per-level compiled programs, and absorbs all measurements with one
+    fused masked bank update — the controller overhead per stream shrinks
+    with S, which is the paper's overhead argument (0.6-1.7 % per input)
+    at fleet scale.
+
+    Streams churn between ticks: :meth:`admit` leases a free lane (the
+    filter banks recycle the departed tenant's slot — no re-padding, no
+    re-trace while within capacity) and :meth:`retire` releases one.  When
+    every lane is occupied, :meth:`admit` doubles capacity (banks
+    :meth:`~repro.core.kalman.SlowdownFilterBank.grow`), which re-traces
+    once at the new ``[S]`` — the amortised cost model of a dynamic array.
     """
 
     def __init__(self, engine: ServeEngine, params,
@@ -148,12 +164,12 @@ class FleetAlertServer:
                  n_power_buckets: int = 4,
                  profile_iters: int = 3, q_fail: float = 0.0,
                  prompt_len: int = 8, gen_tokens: int = 4,
-                 accuracy_window: int = 10):
+                 accuracy_window: int = 10,
+                 start_active: bool = True):
         self.engine = engine
         self.params = params
         self.goal = goal
         self.gen_tokens = gen_tokens
-        self.n_streams = n_streams
         pm = power_model or PowerModel()
         self.power_model = pm
         self.table = profile_serve_table(
@@ -165,52 +181,112 @@ class FleetAlertServer:
         self.idle_power = IdlePowerFilterBank(n_streams)
         self.accuracy_window = accuracy_window
         self._goal_bank: WindowedGoalBank | None = None
-        self.history: list[list[ServedInput]] = []
+        self.active = np.full(n_streams, bool(start_active))
+        self.goal_kinds = np.full(n_streams, goal_codes([goal])[0],
+                                  dtype=np.int64)
+        self.history: list[list[ServedInput | None]] = []
 
-    def _effective_accuracy_goal(self, constraints: list[Constraints]
-                                 ) -> np.ndarray | None:
-        """Per-stream effective Q_goal from each stream's own constraint.
+    @property
+    def n_streams(self) -> int:
+        """Lane capacity (live + free); ``active`` marks the live ones."""
+        return self.active.shape[0]
+
+    # ------------------------------------------------------------------ #
+    # churn: lane lease / release between ticks                          #
+    # ------------------------------------------------------------------ #
+    def admit(self, goal: Goal | None = None) -> int:
+        """Lease a lane for a new stream; returns its lane id.
+
+        The lane's filter state is re-initialised to the paper's priors and
+        its accuracy window cleared (a new tenant must not inherit the
+        departed stream's environment estimate).  Within capacity this
+        touches only ``[S]`` vectors — the engine's compiled executables
+        are untouched.
+        """
+        free = np.nonzero(~self.active)[0]
+        if free.size == 0:
+            new_cap = max(2 * self.n_streams, 1)
+            lane = self.n_streams
+            self.slowdown.grow(new_cap)
+            self.idle_power.grow(new_cap)
+            if self._goal_bank is not None:
+                self._goal_bank.grow(new_cap)
+            self.active = np.concatenate(
+                [self.active, np.zeros(new_cap - lane, bool)])
+            self.goal_kinds = np.concatenate(
+                [self.goal_kinds,
+                 np.full(new_cap - lane, goal_codes([self.goal])[0],
+                         dtype=np.int64)])
+        else:
+            lane = int(free[0])
+        self.slowdown.reset_lanes([lane])
+        self.idle_power.reset_lanes([lane])
+        if self._goal_bank is not None:
+            self._goal_bank.reset_lanes([lane])
+        self.goal_kinds[lane] = goal_codes([goal or self.goal])[0]
+        self.active[lane] = True
+        return lane
+
+    def retire(self, lane: int) -> None:
+        """Release a lane; its slot is recycled by a later :meth:`admit`."""
+        self.active[lane] = False
+
+    # ------------------------------------------------------------------ #
+    def _effective_accuracy_goal(self, constraints) -> np.ndarray:
+        """Per-stream effective Q_goal from each live stream's constraint.
         A stream whose goal changes gets its accuracy window reset (same
         semantics as the scalar controller's recreate-on-change), without
-        discarding the other streams' history."""
-        goals = [c.accuracy_goal for c in constraints]
-        if all(g is None for g in goals):
-            return None
-        if any(g is None for g in goals):
-            raise ValueError("accuracy_goal must be set on every stream's "
-                             "Constraints (or on none)")
-        arr = np.asarray(goals, dtype=np.float64)
+        discarding the other streams' history.  Lanes that are dead or
+        optimise Eq. 5 ride along with a zero placeholder."""
+        goals = np.zeros(self.n_streams, dtype=np.float64)
+        for s in np.nonzero(self.active)[0]:
+            if self.goal_kinds[s] != GOAL_MIN_ENERGY:
+                continue
+            c = constraints[s]
+            if c is None or c.accuracy_goal is None:
+                raise ValueError(f"minimize-energy stream {s} needs "
+                                 "accuracy_goal on its Constraints")
+            goals[s] = c.accuracy_goal
         if self._goal_bank is None:
-            self._goal_bank = WindowedGoalBank(arr, self.n_streams,
+            self._goal_bank = WindowedGoalBank(goals, self.n_streams,
                                                self.accuracy_window)
         else:
-            self._goal_bank.set_goals(arr)
+            self._goal_bank.set_goals(goals)
         return self._goal_bank.current_goal()
 
-    def serve_tick(self, prompts: list[np.ndarray],
-                   constraints: list[Constraints]) -> list[ServedInput]:
-        """Serve one input per stream; one engine call scores all of them."""
-        assert len(prompts) == self.n_streams
-        assert len(constraints) == self.n_streams
-        deadlines = np.asarray([c.deadline for c in constraints])
-        e_goals = None
-        if self.goal is Goal.MAXIMIZE_ACCURACY:
-            vals = [c.energy_goal for c in constraints]
-            if any(v is None for v in vals):
-                raise ValueError("maximize-accuracy task needs energy_goal "
-                                 "on every stream's Constraints")
-            e_goals = np.asarray(vals, dtype=np.float64)
+    def serve_tick(self, prompts, constraints) -> list[ServedInput | None]:
+        """Serve one input per live stream; one engine call scores all of
+        them.  ``prompts``/``constraints`` are capacity-length sequences;
+        entries at dead lanes are ignored (``None`` is fine).  Returns one
+        ``ServedInput`` per live lane, ``None`` at dead lanes."""
+        cap = self.n_streams
+        assert len(prompts) == cap
+        assert len(constraints) == cap
+        act = self.active.copy()
+        deadlines = np.ones(cap)
+        e_goals = np.zeros(cap)
+        for s in np.nonzero(act)[0]:
+            c = constraints[s]
+            if c is None:
+                raise ValueError(f"live stream {s} needs Constraints")
+            deadlines[s] = c.deadline
+            if self.goal_kinds[s] == GOAL_MAX_ACCURACY:
+                if c.energy_goal is None:
+                    raise ValueError(f"maximize-accuracy stream {s} needs "
+                                     "energy_goal on its Constraints")
+                e_goals[s] = c.energy_goal
         q_goals = self._effective_accuracy_goal(constraints)
         batch = self.scoring.select(
             self.slowdown.mu, self.slowdown.sigma, self.idle_power.phi,
-            deadlines, accuracy_goal=q_goals, energy_goal=e_goals)
+            deadlines, accuracy_goal=q_goals, energy_goal=e_goals,
+            goal_kind=self.goal_kinds, active=act)
 
-        outs: list[ServedInput] = []
-        observed = np.zeros(self.n_streams)
-        missed = np.zeros(self.n_streams, bool)
-        accs = np.zeros(self.n_streams)
-        active_p = np.zeros(self.n_streams)
-        for s in range(self.n_streams):
+        outs: list[ServedInput | None] = [None] * cap
+        observed = np.zeros(cap)
+        missed = np.zeros(cap, bool)
+        accs = np.zeros(cap)
+        active_p = np.ones(cap)
+        for s in np.nonzero(act)[0]:
             i = int(batch.model_index[s])
             lvl = self.engine.levels[i]
             r = self.engine.generate(self.params, prompts[s],
@@ -220,23 +296,24 @@ class FleetAlertServer:
             miss = (lat > deadlines[s]) or not r["complete"]
             acc = self.table.q_fail if miss \
                 else self.table.candidates[i].accuracy
-            cap = float(self.table.power_caps[int(batch.power_index[s])])
-            f = self.power_model.speed_fraction(cap)
+            cap_w = float(self.table.power_caps[int(batch.power_index[s])])
+            f = self.power_model.speed_fraction(cap_w)
             p = self.power_model.power_at_fraction(f)
             run_t = min(lat, float(deadlines[s]))
             energy = p * run_t + float(self.idle_power.phi[s]) * p * \
                 max(float(deadlines[s]) - run_t, 0.0)
             observed[s], missed[s], accs[s] = run_t, miss, acc
             active_p[s] = p
-            outs.append(ServedInput(
-                level=lvl or 0, power_cap=cap, latency=lat,
+            outs[s] = ServedInput(
+                level=lvl or 0, power_cap=cap_w, latency=lat,
                 missed=bool(miss), accuracy=float(acc),
-                energy=float(energy), feasible=bool(batch.feasible[s])))
+                energy=float(energy), feasible=bool(batch.feasible[s]))
 
         profiled = self.table.latency[batch.model_index, batch.power_index]
-        self.slowdown.observe(observed, profiled, deadline_missed=missed)
-        self.idle_power.observe(0.25 * active_p, active_p)
+        self.slowdown.observe(observed, profiled, deadline_missed=missed,
+                              mask=act)
+        self.idle_power.observe(0.25 * active_p, active_p, mask=act)
         if self._goal_bank is not None:
-            self._goal_bank.record(accs)
+            self._goal_bank.record(accs, mask=act)
         self.history.append(outs)
         return outs

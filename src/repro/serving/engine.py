@@ -50,7 +50,7 @@ class ServeEngine:
         if cfg.nest_levels > 1 and level is not None:
             # Level-k programs write level-k KV widths; size the buffers to
             # the level (the controller fixes the level per request, so a
-            # request's cache stays consistent — DESIGN.md §5).
+            # request's cache stays consistent — DESIGN.md §6).
             from repro.models.attention import head_stripe_specs
             _, _, kv_spec = head_stripe_specs(cfg)
             n_kv = kv_spec.width(level) // cfg.head_dim

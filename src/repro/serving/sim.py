@@ -20,9 +20,13 @@ Schemes (paper Table 3):
     oracle       — per-input perfect knowledge, dynamic optimal
     oracle_static— best single (model, power) fixed for the whole trace
 
-Scale: :class:`FleetSim` advances S independent streams in lockstep and
-scores ALL of them with one :class:`BatchedAlertEngine` call per tick
-(struct-of-arrays Kalman banks, vectorised delivery).  The single-stream
+Scale: :class:`FleetSim` advances S independent streams on one global
+tick grid and scores ALL of them with one :class:`BatchedAlertEngine`
+call per tick (struct-of-arrays Kalman banks, vectorised delivery).
+Streams may be fully heterogeneous — per-stream :class:`StreamSpec`
+bundles a stream's own Phase schedule, goal type, constraints, and
+arrival/departure ticks — and lanes outside a stream's lifetime are
+masked, not re-padded (DESIGN.md §5).  The single-stream
 ``InferenceSim.run_alert`` is the S=1 slice of the same path.
 """
 
@@ -33,9 +37,11 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.batched import BatchedAlertEngine, WindowedGoalBank
+from repro.core.batched import (BatchedAlertEngine, WindowedGoalBank,
+                                goal_codes)
 from repro.core.controller import Constraints, Goal
-from repro.core.kalman import IdlePowerFilterBank, SlowdownFilterBank
+from repro.core.kalman import (IdlePowerFilterBank, SlowdownFilterBank,
+                               observe_fleet)
 from repro.core.profiles import ProfileTable
 
 
@@ -99,15 +105,26 @@ class TraceResult:
 
 class EnvironmentTrace:
     """Pre-drawn environment randomness so every scheme sees the SAME
-    trace (paired comparison, like the paper's fixed input sets)."""
+    trace (paired comparison, like the paper's fixed input sets).
 
-    def __init__(self, phases: tuple[Phase, ...], seed: int = 0,
+    All randomness flows through one explicitly threaded
+    ``numpy.random.Generator`` — never the legacy global ``np.random``
+    state — so a given integer seed yields a bit-identical trace on every
+    run and platform (``tests/test_serving.py`` pins this).  ``seed`` may
+    also be a pre-built ``Generator`` for callers that manage their own
+    stream (e.g. spawned child generators for fleet members); note a
+    Generator is consumed by construction, so pass a fresh one per trace.
+    """
+
+    def __init__(self, phases: tuple[Phase, ...],
+                 seed: int | np.random.Generator = 0,
                  length_cv: float = 0.0, deadline_cv: float = 0.0):
         self.phases = tuple(phases)
-        self.seed = seed
+        self.seed = seed if isinstance(seed, int) else None
         self.length_cv = length_cv
         self.deadline_cv = deadline_cv
-        rng = np.random.default_rng(seed)
+        rng = seed if isinstance(seed, np.random.Generator) \
+            else np.random.default_rng(seed)
         xs, phase_id = [], []
         for pi, ph in enumerate(phases):
             sigma = np.sqrt(np.log(1 + ph.jitter_cv ** 2))
@@ -346,77 +363,135 @@ class InferenceSim:
 # ------------------------------------------------------------------ #
 # Fleet-scale simulation: S streams, one engine call per tick         #
 # ------------------------------------------------------------------ #
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """One tenant of a heterogeneous fleet: its own environment trace
+    (per-stream :class:`Phase` schedule), its own optimisation problem
+    (``goal`` + ``constraints`` — deadline, accuracy goal, energy budget),
+    and its own lifetime (``arrival`` tick; departure is implicit at
+    ``arrival + trace.n``, so streams join and leave mid-run)."""
+
+    trace: EnvironmentTrace
+    goal: Goal
+    constraints: Constraints
+    arrival: int = 0
+
+
 @dataclasses.dataclass
 class FleetResult:
-    """Per-stream, per-input outcomes of a fleet run: arrays are [S, N]."""
+    """Per-stream, per-tick outcomes of a fleet run: arrays are [S, T]
+    on the shared global tick grid (ragged fleets are zero-padded outside
+    each stream's ``[arrival, arrival + length)`` window; ``active`` marks
+    the live cells).  :meth:`stream` slices a stream's own local-length
+    :class:`TraceResult` back out."""
 
     energy: np.ndarray
     accuracy: np.ndarray
     latency: np.ndarray
     missed: np.ndarray
     scheme: str = ""
-    budget: np.ndarray | None = None   # [S, N]
+    budget: np.ndarray | None = None       # [S, T]
+    arrivals: np.ndarray | None = None     # [S] global arrival tick
+    lengths: np.ndarray | None = None      # [S] per-stream trace length
+    active: np.ndarray | None = None       # [S, T] live-cell mask
+    has_budget: np.ndarray | None = None   # [S] stream has an energy goal
 
     @property
     def n_streams(self) -> int:
         return self.energy.shape[0]
 
+    def _window(self, s: int) -> slice:
+        a = 0 if self.arrivals is None else int(self.arrivals[s])
+        n = self.energy.shape[1] if self.lengths is None \
+            else int(self.lengths[s])
+        return slice(a, a + n)
+
     def stream(self, s: int) -> TraceResult:
+        w = self._window(s)
+        budget = None
+        if self.budget is not None and (
+                self.has_budget is None or self.has_budget[s]):
+            budget = self.budget[s, w]
         return TraceResult(
-            self.energy[s], self.accuracy[s], self.latency[s],
-            self.missed[s], self.scheme,
-            budget=None if self.budget is None else self.budget[s])
+            self.energy[s, w], self.accuracy[s, w], self.latency[s, w],
+            self.missed[s, w], self.scheme, budget=budget)
 
     @property
     def results(self) -> list[TraceResult]:
         return [self.stream(s) for s in range(self.n_streams)]
 
+    def _live(self, x: np.ndarray) -> np.ndarray:
+        return x if self.active is None else x[self.active]
+
     @property
     def mean_energy(self) -> float:
-        return float(self.energy.mean())
+        return float(self._live(self.energy).mean())
 
     @property
     def mean_error(self) -> float:
-        return float(1.0 - self.accuracy.mean())
+        return float(1.0 - self._live(self.accuracy).mean())
 
     @property
     def miss_rate(self) -> float:
-        return float(self.missed.mean())
+        return float(self._live(self.missed).mean())
 
 
 class FleetSim:
-    """S independent ALERT streams advanced in lockstep.
+    """S independent ALERT streams advanced on one global tick grid.
 
-    Every stream has its own environment randomness, Kalman state, and
-    windowed accuracy goal, but per tick the estimation + selection for ALL
-    streams is ONE :class:`BatchedAlertEngine` call over the [S, K, L]
-    grid, and the filter banks apply one fused update.  Semantics per
-    stream are identical to the scalar loop the paper describes (and that
-    ``InferenceSim.run_alert`` exposed pre-fleet): windowed accuracy goal,
-    miss inflation, overhead subtraction, relaxation priority, and the
-    anytime uncensored-observation co-design are all preserved —
-    ``tests/test_batched.py`` pins this with an exact-trajectory test.
+    Every stream has its own environment randomness, Kalman state,
+    windowed accuracy goal — and, in the general form, its own goal type,
+    constraints, arrival tick, and lifetime.  Per tick the estimation +
+    selection for ALL live streams is ONE :class:`BatchedAlertEngine` call
+    over the [S, K, L] grid (per-stream ``goal_kind`` codes + active-lane
+    mask, DESIGN.md §5), and the filter banks apply one fused masked
+    update.  Streams outside their ``[arrival, arrival + n)`` window are
+    dead lanes: masked out of selection and feedback, never re-padded, so
+    the engine's jit cache is untouched by churn.
+
+    Semantics per stream are identical to the scalar loop the paper
+    describes (and that ``InferenceSim.run_alert`` exposed pre-fleet):
+    windowed accuracy goal, miss inflation, overhead subtraction,
+    relaxation priority, and the anytime uncensored-observation co-design
+    are all preserved — ``tests/test_batched.py`` pins this with exact
+    trajectory and join/leave slice-equality tests.
     """
 
     def __init__(self, table: ProfileTable,
                  traces: Sequence[EnvironmentTrace],
-                 phi_true: float = 0.25):
-        ns = {t.n for t in traces}
-        assert len(ns) == 1, "all streams must have equal-length traces"
+                 phi_true: float = 0.25,
+                 arrivals: Sequence[int] | None = None):
         self.table = table
         self.phi_true = phi_true
         self.n_streams = len(traces)
-        self.n_inputs = ns.pop()
-        self.xi = np.stack([t.xi for t in traces])                  # [S, N]
-        self.lam = np.stack([t.lam for t in traces])                # [S, N]
-        self.deadline_scale = np.stack([t.deadline_scale
-                                        for t in traces])           # [S, N]
+        self.lengths = np.asarray([t.n for t in traces], dtype=np.int64)
+        self.arrivals = np.zeros(self.n_streams, dtype=np.int64) \
+            if arrivals is None else np.asarray(arrivals, dtype=np.int64)
+        assert self.arrivals.shape == (self.n_streams,)
+        assert np.all(self.arrivals >= 0)
+        self.n_ticks = int((self.arrivals + self.lengths).max())
+        self.n_inputs = self.n_ticks   # lockstep-era alias
+        s_n, t_n = self.n_streams, self.n_ticks
+        # Padded [S, T] environment grids: each stream's trace occupies its
+        # arrival window; padding is a benign 1.0 (dead lanes are masked
+        # out of everything anyway).
+        self.xi = np.ones((s_n, t_n))
+        self.lam = np.ones((s_n, t_n))
+        self.deadline_scale = np.ones((s_n, t_n))
+        self.active = np.zeros((s_n, t_n), dtype=bool)
+        for s, tr in enumerate(traces):
+            a, n = int(self.arrivals[s]), int(self.lengths[s])
+            self.xi[s, a:a + n] = tr.xi
+            self.lam[s, a:a + n] = tr.lam
+            self.deadline_scale[s, a:a + n] = tr.deadline_scale
+            self.active[s, a:a + n] = True
         groups = table.anytime_groups()
         self._anytime_idx = sorted({i for g in groups.values() for i in g})
         self._trad_idx = [i for i in range(len(table.candidates))
                           if i not in self._anytime_idx]
         self._is_anytime = np.zeros(len(table.candidates), bool)
         self._is_anytime[self._anytime_idx] = True
+        self.engine: BatchedAlertEngine | None = None  # last run's engine
 
     @classmethod
     def from_phases(cls, table: ProfileTable, phases: tuple[Phase, ...],
@@ -429,13 +504,52 @@ class FleetSim:
                   for s in range(n_streams)]
         return cls(table, traces, phi_true=phi_true)
 
+    @classmethod
+    def from_specs(cls, table: ProfileTable, specs: Sequence[StreamSpec],
+                   phi_true: float = 0.25) -> "FleetSim":
+        """Heterogeneous, churning fleet from :class:`StreamSpec` tenants
+        (run it with :meth:`run_specs`)."""
+        return cls(table, [sp.trace for sp in specs], phi_true=phi_true,
+                   arrivals=[sp.arrival for sp in specs])
+
     # -------------------------------------------------------------- #
     def run_alert(self, goal: Goal, cons: Constraints, *,
                   anytime: bool = True, power_control: bool = True,
                   dnn_control: bool = True, overhead: float = 0.0,
                   paper_faithful_energy: bool = True,
                   scheme_name: str = "alert") -> FleetResult:
+        """Fleet-wide uniform goal/constraints (the Table-3 schemes)."""
+        return self.run_streams(
+            [goal] * self.n_streams, [cons] * self.n_streams,
+            anytime=anytime, power_control=power_control,
+            dnn_control=dnn_control, overhead=overhead,
+            paper_faithful_energy=paper_faithful_energy,
+            scheme_name=scheme_name)
+
+    def run_specs(self, specs: Sequence[StreamSpec],
+                  **kwargs) -> FleetResult:
+        """Run the per-spec goals/constraints (fleet built via
+        :meth:`from_specs`, same stream order)."""
+        assert len(specs) == self.n_streams
+        return self.run_streams([sp.goal for sp in specs],
+                                [sp.constraints for sp in specs], **kwargs)
+
+    def run_streams(self, goals: Sequence[Goal],
+                    constraints: Sequence[Constraints], *,
+                    anytime: bool = True, power_control: bool = True,
+                    dnn_control: bool = True, overhead: float = 0.0,
+                    paper_faithful_energy: bool = True,
+                    scheme_name: str = "alert") -> FleetResult:
+        """Advance the whole (possibly ragged, heterogeneous) fleet; one
+        masked engine call per global tick."""
         table = self.table
+        assert len(goals) == self.n_streams
+        assert len(constraints) == self.n_streams
+        for g, c in zip(goals, constraints):
+            if g is Goal.MINIMIZE_ENERGY and c.accuracy_goal is None:
+                raise ValueError(f"{g} stream needs accuracy_goal")
+            if g is Goal.MAXIMIZE_ACCURACY and c.energy_goal is None:
+                raise ValueError(f"{g} stream needs energy_goal")
         idx = list(range(len(table.candidates)))
         if not anytime:
             idx = self._trad_idx
@@ -447,13 +561,22 @@ class FleetSim:
         idx_arr = np.asarray(idx)
         sub = table.subset(idx)
         engine = BatchedAlertEngine(
-            sub, goal, overhead=overhead,
+            sub, None, overhead=overhead,
             paper_faithful_energy=paper_faithful_energy)
-        s_n, n_in = self.n_streams, self.n_inputs
+        self.engine = engine
+        s_n, t_n = self.n_streams, self.n_ticks
+        gk = goal_codes(goals)                                      # [S]
         slow = SlowdownFilterBank(s_n)
         idle = IdlePowerFilterBank(s_n)
-        goal_bank = None if cons.accuracy_goal is None else \
-            WindowedGoalBank(cons.accuracy_goal, s_n)
+        has_q = np.asarray([c.accuracy_goal is not None
+                            for c in constraints])
+        q0 = np.asarray([c.accuracy_goal if c.accuracy_goal is not None
+                         else 0.0 for c in constraints])
+        has_b = np.asarray([c.energy_goal is not None
+                            for c in constraints])
+        e_base = np.asarray([c.energy_goal if c.energy_goal is not None
+                             else 0.0 for c in constraints])
+        goal_bank = WindowedGoalBank(q0, s_n) if has_q.any() else None
         # System default power: race-to-idle = always the max cap.
         full_power_j = len(table.power_caps) - 1
 
@@ -461,22 +584,33 @@ class FleetSim:
         st = table.staircase_tensors()
         m = st.lvl_lat.shape[1]
 
-        dmat = cons.deadline * self.deadline_scale                  # [S, N]
-        bmat = None if cons.energy_goal is None else \
-            cons.energy_goal * self.deadline_scale
-        out = FleetResult(np.zeros((s_n, n_in)), np.zeros((s_n, n_in)),
-                          np.zeros((s_n, n_in)), np.zeros((s_n, n_in), bool),
-                          scheme_name, budget=bmat)
-        scale_mat = self.xi * self.lam                              # [S, N]
+        dls = np.asarray([c.deadline for c in constraints])
+        dmat = dls[:, None] * self.deadline_scale                   # [S, T]
+        # Energy budgets scale with the per-input time allotment
+        # (E_goal = P_goal * T_goal, paper Section 3.1).
+        bmat = e_base[:, None] * self.deadline_scale                # [S, T]
+        out = FleetResult(np.zeros((s_n, t_n)), np.zeros((s_n, t_n)),
+                          np.zeros((s_n, t_n)),
+                          np.zeros((s_n, t_n), bool), scheme_name,
+                          budget=bmat if has_b.any() else None,
+                          arrivals=self.arrivals, lengths=self.lengths,
+                          active=self.active, has_budget=has_b)
+        scale_mat = self.xi * self.lam                              # [S, T]
+        rows_all = np.arange(s_n)
 
-        for n in range(n_in):
+        for n in range(t_n):
+            act = self.active[:, n]                                 # [S]
             dvec = dmat[:, n]
-            q_goal_eff = None if goal_bank is None else \
+            q_goal_eff = q0 if goal_bank is None else \
                 goal_bank.current_goal()
-            e_goal = None if bmat is None else bmat[:, n]
+            e_goal = bmat[:, n]
+            # Pick-only pass: delivery below re-derives the real outcomes,
+            # so the per-pick prediction gathers would be dead weight.
             batch = engine.select(slow.mu, slow.sigma, idle.phi, dvec,
                                   accuracy_goal=q_goal_eff,
-                                  energy_goal=e_goal)
+                                  energy_goal=e_goal,
+                                  goal_kind=gk, active=act,
+                                  predictions=False)
             i_local = batch.model_index                             # [S]
             j_pick = batch.power_index                              # [S]
             j_act = np.full(s_n, full_power_j) if not power_control \
@@ -492,30 +626,41 @@ class FleetSim:
                 (lvl_lat * scale[:, None] <= dvec[:, None])
             any_done = completed.any(axis=1)
             last_done = (m - 1) - np.argmax(completed[:, ::-1], axis=1)
-            rows = np.arange(s_n)
             acc = np.where(any_done,
                            st.lvl_acc[i_glob, last_done], table.q_fail)
             run_t = np.minimum(lat, dvec)
             p = table.run_power[i_glob, j_act]
             energy = p * run_t + self.phi_true * p * \
                 np.maximum(dvec - run_t, 0.0)
-            out.latency[:, n] = run_t
-            out.accuracy[:, n] = acc
-            out.energy[:, n] = energy
-            out.missed[:, n] = missed
+            live = np.nonzero(act)[0]
+            out.latency[live, n] = run_t[live]
+            out.accuracy[live, n] = acc[live]
+            out.energy[live, n] = energy[live]
+            out.missed[live, n] = missed[live]
 
             # --- fused feedback (anytime co-design: a missed deadline
             # with a completed level is an UNCENSORED observation) ---
             use_obs = missed & self._is_anytime[i_glob] & any_done
-            obs_lat = lvl_lat[rows, last_done] * scale
-            obs_prof = lvl_lat[rows, last_done]
+            obs_lat = lvl_lat[rows_all, last_done] * scale
+            obs_prof = lvl_lat[rows_all, last_done]
             observed = np.where(use_obs, obs_lat, run_t)
             profiled = np.where(use_obs, obs_prof,
                                 sub.latency[i_local, j_pick])
             miss_flag = np.where(use_obs, False, missed)
-            slow.observe(observed, profiled, deadline_missed=miss_flag)
-            idle.observe(self.phi_true * table.run_power[i_glob, j_act],
-                         sub.run_power[i_local, j_pick])
+            observe_fleet(
+                slow, idle, observed, profiled,
+                deadline_missed=miss_flag,
+                idle_power=self.phi_true * table.run_power[i_glob, j_act],
+                active_power=sub.run_power[i_local, j_pick], mask=act)
             if goal_bank is not None:
-                goal_bank.record(acc)
+                goal_bank.record(acc, mask=act)
         return out
+
+
+def run_fleet(table: ProfileTable, specs: Sequence[StreamSpec], *,
+              phi_true: float = 0.25, **kwargs) -> FleetResult:
+    """One-call heterogeneous fleet run: build a :class:`FleetSim` from
+    ``specs`` (per-stream traces, goals, constraints, arrivals) and advance
+    it tick by tick through one masked batched-engine call per tick."""
+    fleet = FleetSim.from_specs(table, specs, phi_true=phi_true)
+    return fleet.run_specs(specs, **kwargs)

@@ -1,0 +1,81 @@
+"""Regenerate ``tests/golden_traces.json`` — the checked-in scheme-drift
+fixtures asserted by ``tests/test_serving.py``.
+
+For each environment (``default``/``cpu``/``memory``) the fixture records
+the ``alert`` and ``oracle`` schemes' mean energy / mean error / miss rate
+on a fixed seed-1 trace, plus the alert-vs-oracle gaps.  Any change to
+controller semantics (estimation, selection, relaxation, feedback, the
+windowed goal, delivery) moves these numbers and fails the regression
+test; re-run this script ONLY when a semantic change is intentional:
+
+    PYTHONPATH=src python tests/make_golden_traces.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.core.controller import Constraints, Goal
+from repro.serving.sim import ENVS, EnvironmentTrace, InferenceSim
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:  # allow `python tests/make_golden_traces.py`
+    sys.path.insert(0, _ROOT)
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "golden_traces.json")
+
+GOLDEN_SEED = 1
+GOLDEN_BUDGET_W = 170.0
+
+
+def golden_config():
+    """The fixed scenario both the generator and the test rebuild."""
+    from benchmarks.common import deadline_range, family_table
+
+    table = family_table("image")
+    deadline = float(deadline_range(table, 3)[1])
+    cons = Constraints.from_power_budget(deadline, GOLDEN_BUDGET_W)
+    return table, cons
+
+
+def compute_golden() -> dict:
+    table, cons = golden_config()
+    out = {"seed": GOLDEN_SEED, "budget_w": GOLDEN_BUDGET_W,
+           "goal": "maximize_accuracy", "envs": {}}
+    for env_name in ("default", "cpu", "memory"):
+        trace = EnvironmentTrace(ENVS[env_name], seed=GOLDEN_SEED)
+        sim = InferenceSim(table, trace)
+        rows = {}
+        for scheme in ("alert", "oracle"):
+            r = sim.run_scheme(scheme, Goal.MAXIMIZE_ACCURACY, cons)
+            rows[scheme] = {"mean_energy": r.mean_energy,
+                            "mean_error": r.mean_error,
+                            "miss_rate": r.miss_rate}
+        rows["gap"] = {
+            "energy": rows["alert"]["mean_energy"]
+            - rows["oracle"]["mean_energy"],
+            "error": rows["alert"]["mean_error"]
+            - rows["oracle"]["mean_error"],
+        }
+        out["envs"][env_name] = rows
+    return out
+
+
+def main() -> None:
+    data = compute_golden()
+    with open(OUT, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {OUT}")
+    for env, rows in data["envs"].items():
+        print(f"  {env:8s} alert e={rows['alert']['mean_energy']:.4f} "
+              f"err={rows['alert']['mean_error']:.4f}  gap "
+              f"e={rows['gap']['energy']:+.4f} "
+              f"err={rows['gap']['error']:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,14 +17,16 @@ Three layers of guarantees:
 import numpy as np
 import pytest
 
-from repro.core.batched import (BatchedAlertEngine, RELAXED_NAMES,
-                                WindowedGoalBank)
+from repro.core.batched import (BatchedAlertEngine, GOAL_MAX_ACCURACY,
+                                GOAL_MIN_ENERGY, RELAXED_NAMES,
+                                WindowedGoalBank, goal_codes)
 from repro.core.controller import (AlertController, Constraints, Goal,
                                    WindowedAccuracyGoal)
 from repro.core.kalman import (IdlePowerFilter, IdlePowerFilterBank,
                                SlowdownFilter, SlowdownFilterBank)
 from repro.core.reference import ScalarReferenceController
-from repro.serving.sim import ENVS, EnvironmentTrace, FleetSim, InferenceSim
+from repro.serving.sim import (ENVS, EnvironmentTrace, FleetSim,
+                               InferenceSim, StreamSpec, run_fleet)
 
 from benchmarks.common import deadline_range, family_table
 from benchmarks.controller_bench import random_state, random_table
@@ -125,7 +127,145 @@ class TestParity:
                               rtol=0, atol=0)
 
 
+class TestMaskedHeterogeneousEngine:
+    def test_mixed_goal_codes_match_homogeneous_engines(self):
+        """One hetero call == the per-goal homogeneous engines, bitwise."""
+        table = family_table("image")
+        dls = deadline_range(table, 5)
+        rng = np.random.default_rng(9)
+        s = 16
+        mus, sds, phis = random_state(rng, s)
+        d = rng.choice(dls, s)
+        qg = rng.uniform(0.6, 0.95, s)
+        eg = rng.uniform(0.5, 3.0, s)
+        gk = rng.integers(0, 2, s)
+        hetero = BatchedAlertEngine(table, None)
+        b = hetero.select(mus, sds, phis, d, accuracy_goal=qg,
+                          energy_goal=eg, goal_kind=gk)
+        b_min = BatchedAlertEngine(table, Goal.MINIMIZE_ENERGY).select(
+            mus, sds, phis, d, accuracy_goal=qg)
+        b_max = BatchedAlertEngine(table, Goal.MAXIMIZE_ACCURACY).select(
+            mus, sds, phis, d, energy_goal=eg)
+        for i in range(s):
+            src = b_min if gk[i] == GOAL_MIN_ENERGY else b_max
+            assert b.model_index[i] == src.model_index[i]
+            assert b.power_index[i] == src.power_index[i]
+            assert b.predicted_energy[i] == src.predicted_energy[i]
+            assert b.feasible[i] == src.feasible[i]
+            assert b.relaxed_code[i] == src.relaxed_code[i]
+
+    def test_dead_lane_garbage_cannot_perturb_live_lanes(self):
+        """NaN/inf/negative junk in dead lanes: live picks unchanged,
+        dead lanes return deterministic nulls."""
+        table = family_table("nlp")
+        dls = deadline_range(table, 5)
+        rng = np.random.default_rng(3)
+        s = 10
+        mus, sds, phis = random_state(rng, s)
+        d = rng.choice(dls, s)
+        qg = rng.uniform(0.6, 0.9, s)
+        eg = rng.uniform(0.5, 2.0, s)
+        gk = rng.integers(0, 2, s)
+        engine = BatchedAlertEngine(table, None)
+        clean = engine.select(mus, sds, phis, d, accuracy_goal=qg,
+                              energy_goal=eg, goal_kind=gk)
+        act = np.ones(s, bool)
+        act[[1, 4, 7]] = False
+        for junk in (np.nan, np.inf, -np.inf, -5.0):
+            mus2, d2, qg2 = mus.copy(), d.copy(), qg.copy()
+            mus2[~act] = junk
+            d2[~act] = junk
+            qg2[~act] = junk
+            got = engine.select(mus2, sds, phis, d2, accuracy_goal=qg2,
+                                energy_goal=eg, goal_kind=gk, active=act)
+            for i in range(s):
+                if act[i]:
+                    assert got.model_index[i] == clean.model_index[i]
+                    assert got.predicted_energy[i] == \
+                        clean.predicted_energy[i]
+                else:
+                    assert got.model_index[i] == 0
+                    assert got.power_index[i] == 0
+                    assert got.predicted_energy[i] == 0.0
+                    assert not got.feasible[i]
+                    assert got.relaxed_code[i] == 0
+
+    def test_churn_never_retraces(self):
+        """200 ticks of mask/goal churn at fixed S: one select executable."""
+        table = family_table("image")
+        dls = deadline_range(table, 5)
+        engine = BatchedAlertEngine(table, None)
+        rng = np.random.default_rng(0)
+        s = 64
+        for _ in range(200):
+            mus, sds, phis = random_state(rng, s)
+            engine.select(mus, sds, phis, rng.choice(dls, s),
+                          accuracy_goal=rng.uniform(0.5, 0.9, s),
+                          energy_goal=rng.uniform(0.5, 2.0, s),
+                          goal_kind=rng.integers(0, 2, s),
+                          active=rng.random(s) < 0.9)
+        assert engine.n_compiles()[1] == 1
+
+    def test_goal_kind_required_without_default(self):
+        table = family_table("image")
+        engine = BatchedAlertEngine(table, None)
+        with pytest.raises(ValueError, match="goal_kind"):
+            engine.select(1.0, 0.1, 0.25, np.asarray([1.0]),
+                          accuracy_goal=np.asarray([0.8]))
+        with pytest.raises(ValueError, match="accuracy_goal"):
+            engine.select(1.0, 0.1, 0.25, np.asarray([1.0]),
+                          energy_goal=np.asarray([1.0]),
+                          goal_kind=np.asarray([GOAL_MIN_ENERGY]))
+        with pytest.raises(ValueError, match="energy_goal"):
+            engine.select(1.0, 0.1, 0.25, np.asarray([1.0]),
+                          accuracy_goal=np.asarray([0.8]),
+                          goal_kind=np.asarray([GOAL_MAX_ACCURACY]))
+
+    def test_goal_codes_helper(self):
+        got = goal_codes([Goal.MINIMIZE_ENERGY, Goal.MAXIMIZE_ACCURACY, 0])
+        assert got.tolist() == [GOAL_MIN_ENERGY, GOAL_MAX_ACCURACY,
+                                GOAL_MIN_ENERGY]
+
+
 class TestFilterBanks:
+    def test_bank_lane_pool_reset_grow_shrink(self):
+        """Lane recycling: reset restores priors on exactly the reset
+        lanes; grow/shrink change capacity with fresh lanes."""
+        bank = SlowdownFilterBank(4)
+        bank.observe(np.full(4, 2.0), np.ones(4))
+        bank.reset_lanes([1, 2])
+        fresh = SlowdownFilter()
+        assert bank.mu[1] == fresh.mu and bank.sigma[1] == fresh.sigma
+        assert bank.gain[1] == fresh.gain and bank.n_updates[1] == 0
+        assert bank.mu[0] != fresh.mu and bank.n_updates[0] == 1
+        bank.grow(6)
+        assert bank.n_streams == 6 and bank.mu[5] == fresh.mu
+        bank.observe(np.full(6, 1.5), np.ones(6))
+        bank.shrink(3)
+        assert bank.n_streams == 3
+        bank.observe(np.full(3, 1.2), np.ones(3))  # still updatable
+        idle = IdlePowerFilterBank(3)
+        idle.observe(np.full(3, 20.0), np.full(3, 100.0))
+        idle.reset_lanes([0])
+        assert idle.phi[0] == IdlePowerFilter().phi
+        assert idle.n_updates[0] == 0
+        idle.grow(5)
+        idle.shrink(2)
+        assert idle.n_streams == 2
+
+    def test_goal_bank_reset_lanes_clears_equal_goal_window(self):
+        """Re-admission with the SAME goal must still clear the window
+        (set_goals alone would keep the departed tenant's history)."""
+        bank = WindowedGoalBank(np.asarray([0.8, 0.8]), 2, window=5)
+        bank.record(np.asarray([0.1, 0.1]))
+        assert bank.current_goal()[0] > 0.8
+        bank.reset_lanes([0], goal=0.8)
+        got = bank.current_goal()
+        assert got[0] == 0.8          # fresh window
+        assert got[1] > 0.8           # untouched neighbour
+        bank.grow(4, goal_fill=0.9)
+        assert bank.current_goal().shape == (4,)
+        assert bank.current_goal()[3] == 0.9
     def test_slowdown_bank_matches_scalar(self):
         s = 5
         bank = SlowdownFilterBank(s)
@@ -282,6 +422,75 @@ class TestFleetSim:
                                           single.accuracy)
             np.testing.assert_array_equal(fr.stream(s).missed,
                                           single.missed)
+
+    def test_heterogeneous_fleet_slices_equal_independent_runs(self):
+        """The acceptance fleet: 3 streams with distinct goal types,
+        deadlines, environments, and lifetimes (one joins late, one leaves
+        early) — every stream's TraceResult is bitwise-equal to its own
+        independent InferenceSim.run_alert, and the engine never re-traces
+        while the fleet churns."""
+        table = family_table("image")
+        dls = deadline_range(table, 5)
+        specs = [
+            StreamSpec(EnvironmentTrace(ENVS["cpu"], seed=11,
+                                        deadline_cv=0.1),
+                       Goal.MINIMIZE_ENERGY,
+                       Constraints(deadline=float(dls[1]),
+                                   accuracy_goal=0.8)),
+            StreamSpec(EnvironmentTrace(ENVS["memory"], seed=22),
+                       Goal.MAXIMIZE_ACCURACY,
+                       Constraints.from_power_budget(float(dls[3]), 170.0),
+                       arrival=37),          # joins mid-run
+            StreamSpec(EnvironmentTrace(ENVS["default"], seed=33),
+                       Goal.MINIMIZE_ENERGY,
+                       Constraints(deadline=float(dls[2]),
+                                   accuracy_goal=0.7),
+                       arrival=5),           # departs before the horizon
+        ]
+        fleet = FleetSim.from_specs(table, specs)
+        fr = fleet.run_specs(specs, overhead=1e-4)
+        assert fleet.engine.n_compiles() == (0, 1), \
+            "churn (join/leave) must not re-trace the engine"
+        for s, sp in enumerate(specs):
+            single = InferenceSim(table, sp.trace).run_alert(
+                sp.goal, sp.constraints, overhead=1e-4)
+            got = fr.stream(s)
+            assert got.energy.shape == (sp.trace.n,)
+            np.testing.assert_array_equal(got.energy, single.energy,
+                                          err_msg=f"stream {s}")
+            np.testing.assert_array_equal(got.accuracy, single.accuracy)
+            np.testing.assert_array_equal(got.latency, single.latency)
+            np.testing.assert_array_equal(got.missed, single.missed)
+            if sp.constraints.energy_goal is not None:
+                np.testing.assert_array_equal(got.budget, single.budget)
+
+    def test_run_fleet_one_call_matches_from_specs(self):
+        table = family_table("nlp")
+        dl = float(deadline_range(table, 3)[1])
+        specs = [
+            StreamSpec(EnvironmentTrace(ENVS["default"], seed=1),
+                       Goal.MINIMIZE_ENERGY,
+                       Constraints(deadline=dl, accuracy_goal=0.7)),
+            StreamSpec(EnvironmentTrace(ENVS["cpu"], seed=2),
+                       Goal.MAXIMIZE_ACCURACY,
+                       Constraints.from_power_budget(dl, 170.0),
+                       arrival=3),
+        ]
+        a = run_fleet(table, specs)
+        b = FleetSim.from_specs(table, specs).run_specs(specs)
+        np.testing.assert_array_equal(a.energy, b.energy)
+        np.testing.assert_array_equal(a.active, b.active)
+
+    def test_heterogeneous_stream_validation(self):
+        table = family_table("image")
+        tr = EnvironmentTrace(ENVS["default"], seed=0)
+        fleet = FleetSim(table, [tr])
+        with pytest.raises(ValueError, match="accuracy_goal"):
+            fleet.run_streams([Goal.MINIMIZE_ENERGY],
+                              [Constraints(deadline=1.0)])
+        with pytest.raises(ValueError, match="energy_goal"):
+            fleet.run_streams([Goal.MAXIMIZE_ACCURACY],
+                              [Constraints(deadline=1.0)])
 
     def test_ablation_schemes_run_through_fleet(self):
         """The Table-3 ablations (no-anytime / no-power / no-dnn) keep

@@ -1,4 +1,8 @@
-"""Serving-layer tests: engine per-level programs, batcher, simulator."""
+"""Serving-layer tests: engine per-level programs, batcher, simulator,
+golden-trace scheme regression, and environment-trace determinism."""
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -167,3 +171,139 @@ class TestSimulator:
         assert not r.violates(Goal.MINIMIZE_ENERGY, cons)
         r.accuracy[:50] = 0.1
         assert r.violates(Goal.MINIMIZE_ENERGY, cons)
+
+
+class TestTraceDeterminism:
+    """EnvironmentTrace randomness is fully threaded through one
+    numpy.random.Generator: same seed -> bit-identical trace, every
+    array, every construction."""
+
+    def test_same_seed_identical_trace(self):
+        for env in ENVS.values():
+            a = EnvironmentTrace(env, seed=7, length_cv=0.2,
+                                 deadline_cv=0.1)
+            b = EnvironmentTrace(env, seed=7, length_cv=0.2,
+                                 deadline_cv=0.1)
+            np.testing.assert_array_equal(a.xi, b.xi)
+            np.testing.assert_array_equal(a.lam, b.lam)
+            np.testing.assert_array_equal(a.deadline_scale,
+                                          b.deadline_scale)
+            np.testing.assert_array_equal(a.phase_id, b.phase_id)
+
+    def test_seed_matches_explicit_generator(self):
+        """An int seed is exactly default_rng(seed): callers may thread
+        their own Generator and get the same draws."""
+        a = EnvironmentTrace(ENVS["memory"], seed=13, deadline_cv=0.1)
+        b = EnvironmentTrace(ENVS["memory"],
+                             seed=np.random.default_rng(13),
+                             deadline_cv=0.1)
+        np.testing.assert_array_equal(a.xi, b.xi)
+        np.testing.assert_array_equal(a.lam, b.lam)
+        np.testing.assert_array_equal(a.deadline_scale, b.deadline_scale)
+
+    def test_no_global_rng_interference(self):
+        """Polluting the legacy global RNG state must not change a
+        seeded trace (no hidden np.random.* use)."""
+        np.random.seed(0)
+        a = EnvironmentTrace(ENVS["cpu"], seed=3)
+        np.random.seed(12345)
+        np.random.random(1000)
+        b = EnvironmentTrace(ENVS["cpu"], seed=3)
+        np.testing.assert_array_equal(a.xi, b.xi)
+
+
+class TestGoldenTraces:
+    """Checked-in alert-vs-oracle fixtures (tests/golden_traces.json):
+    any drift in scheme semantics moves these numbers.  Regenerate ONLY
+    for intentional changes: PYTHONPATH=src python
+    tests/make_golden_traces.py"""
+
+    @pytest.fixture(scope="class")
+    def golden(self):
+        path = os.path.join(os.path.dirname(__file__),
+                            "golden_traces.json")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_schemes_match_golden(self, golden):
+        from tests.make_golden_traces import compute_golden
+
+        got = compute_golden()
+        assert set(got["envs"]) == set(golden["envs"])
+        for env, rows in golden["envs"].items():
+            for scheme in ("alert", "oracle"):
+                for key, want in rows[scheme].items():
+                    have = got["envs"][env][scheme][key]
+                    np.testing.assert_allclose(
+                        have, want, rtol=1e-9, atol=1e-12,
+                        err_msg=f"{env}/{scheme}/{key} drifted "
+                                f"(golden {want}, got {have})")
+
+    def test_golden_gaps_sane(self, golden):
+        """The oracle lower-bounds alert's energy in every env (it has
+        perfect knowledge and no conservatism)."""
+        for env, rows in golden["envs"].items():
+            assert rows["gap"]["energy"] > 0, env
+            assert rows["alert"]["mean_error"] < 0.5, env
+
+
+class TestFleetServerChurn:
+    def test_admit_retire_recycles_lanes_without_retrace(self, nested_setup):
+        """Streams join/leave between ticks: retired lanes are recycled
+        with fresh filter state, mixed goal types share one engine call,
+        and churn within capacity never re-traces the scoring pass."""
+        from repro.serving.alert_server import FleetAlertServer
+
+        cfg, model, params = nested_setup
+        engine = ServeEngine(model, max_len=32, batch_size=2)
+        srv = FleetAlertServer(engine, params,
+                               level_accuracies=[0.6, 0.9],
+                               goal=Goal.MAXIMIZE_ACCURACY, n_streams=3,
+                               profile_iters=1, gen_tokens=3)
+        prompt = np.zeros((2, 4), np.int32)
+        budget = float(np.median(srv.table.run_power)) * \
+            float(np.max(srv.table.latency)) * 2.0
+        c_max = Constraints(deadline=10.0, energy_goal=budget)
+        c_min = Constraints(deadline=10.0, accuracy_goal=0.7,
+                            energy_goal=budget)
+        outs = srv.serve_tick([prompt] * 3, [c_max] * 3)
+        assert all(o is not None for o in outs)
+
+        # stream 1 leaves; its lane must be masked out of the next tick
+        srv.retire(1)
+        outs = srv.serve_tick([prompt] * 3, [c_max, None, c_max])
+        assert outs[1] is None and outs[0] is not None
+        assert srv.slowdown.n_updates[1] == 1      # frozen since tick 1
+        mu_frozen = float(srv.slowdown.mu[1])
+
+        # a new MIN-ENERGY tenant recycles lane 1 with fresh priors
+        lane = srv.admit(goal=Goal.MINIMIZE_ENERGY)
+        assert lane == 1
+        assert srv.slowdown.mu[1] == 1.0 and srv.slowdown.n_updates[1] == 0
+        assert srv.slowdown.mu[1] != mu_frozen or mu_frozen == 1.0
+        outs = srv.serve_tick([prompt] * 3, [c_max, c_min, c_max])
+        assert outs[1] is not None
+        assert srv.slowdown.n_updates[1] == 1
+        # mixed goal types all served through ONE compiled select
+        _, n_sel = srv.scoring.n_compiles()
+        assert n_sel == 1
+
+        # admitting past capacity grows the lane pool (amortised re-trace)
+        lanes = [srv.admit() for _ in range(3)]
+        assert srv.n_streams == 6 and set(lanes) == {3, 4, 5}
+        outs = srv.serve_tick([prompt] * 6,
+                              [c_max, c_min, c_max, c_max, c_max, c_max])
+        assert sum(o is not None for o in outs) == 6
+
+    def test_min_energy_lane_requires_accuracy_goal(self, nested_setup):
+        from repro.serving.alert_server import FleetAlertServer
+
+        cfg, model, params = nested_setup
+        engine = ServeEngine(model, max_len=32, batch_size=2)
+        srv = FleetAlertServer(engine, params,
+                               level_accuracies=[0.6, 0.9],
+                               goal=Goal.MINIMIZE_ENERGY, n_streams=1,
+                               profile_iters=1, gen_tokens=3)
+        prompt = np.zeros((2, 4), np.int32)
+        with pytest.raises(ValueError, match="accuracy_goal"):
+            srv.serve_tick([prompt], [Constraints(deadline=10.0)])
