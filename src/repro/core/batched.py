@@ -31,6 +31,17 @@ selection Eq. 4/5 with Section 3.3 relaxation) is evaluated here for
   leave, and switch goals every tick without a single re-trace
   (DESIGN.md §5).
 
+* The ``[S]`` lane axis itself shards over devices: construct the engine
+  with ``mesh=`` (a 1-D lane mesh from
+  :func:`repro.launch.mesh.make_lane_mesh`) and every traced pass runs
+  SPMD — ``[S]``-shaped state is lane-sharded, the ``[K, K]`` staircase
+  weight matrix and ``[K, L]`` profile constants are replicated, and since
+  the decision grid has no cross-lane reduction the partitioned graph
+  needs no collectives and its per-lane picks stay bitwise identical to
+  the single-device pass (DESIGN.md §6).  Callers that keep state on
+  device (the sharded filter banks) pass jax arrays and set
+  ``as_arrays=True`` to keep the whole tick loop free of host gathers.
+
 Numerics: scoring runs in float64 under jax's *scoped* ``enable_x64`` (the
 global flag is never touched), which makes the engine's decisions
 bit-identical to the float64 NumPy reference (:mod:`repro.core.reference`)
@@ -39,7 +50,8 @@ across the parity sweep in ``benchmarks/controller_bench.py``.
 ``AlertController`` is a thin S=1 wrapper over this engine;
 ``repro.serving.sim.FleetSim`` and ``repro.serving.alert_server`` drive
 thousands of streams per tick through one :meth:`BatchedAlertEngine.select`
-call.  Tensor layout details: DESIGN.md §4.
+call.  Tensor layout details: DESIGN.md §4; the paper-equation-to-code
+map is docs/EQUATIONS.md.
 """
 
 from __future__ import annotations
@@ -129,6 +141,8 @@ class DecisionBatch:
         return int(self.model_index.shape[0])
 
     def relaxed_name(self, s: int) -> str:
+        """Stream s's relaxed constraint as the reference's string code
+        (``""``/``"accuracy"``/``"power"``)."""
         return RELAXED_NAMES[int(self.relaxed_code[s])]
 
 
@@ -147,11 +161,22 @@ class BatchedAlertEngine:
     deadline inside :meth:`select` (Section 3.2.1 step 2), and
     ``paper_faithful_energy`` switches Eq. 9 verbatim vs the beyond-paper
     E[min(t, T)] estimator.
+
+    ``mesh`` (optional 1-D lane mesh, see
+    :func:`repro.launch.mesh.make_lane_mesh`) turns on **lane sharding**:
+    every jitted pass is constrained with
+    :class:`~jax.sharding.NamedSharding` so ``[S]`` inputs and outputs
+    shard their lane axis over the mesh while the profile constants baked
+    into the trace replicate.  S must divide the mesh size (fleet callers
+    pad with dead lanes — DESIGN.md §6).  Decisions are bitwise identical
+    to the unsharded engine: the grid has no cross-lane op, so
+    partitioning cannot reassociate any reduction.
     """
 
     def __init__(self, table: ProfileTable, goal=None, *,
                  overhead: float = 0.0,
-                 paper_faithful_energy: bool = True):
+                 paper_faithful_energy: bool = True,
+                 mesh=None):
         from repro.core.controller import Goal  # avoid import cycle
 
         self.table = table
@@ -168,13 +193,29 @@ class BatchedAlertEngine:
         self._c_q_fail = float(table.q_fail)
         self._c_weights = self._staircase_weight_matrix(table)
 
-        self._estimate_jit = jax.jit(self._estimate_impl)
-        self._select_jit = jax.jit(self._select_impl)
+        self.mesh = mesh
+        if mesh is None:
+            self._lane = None
+            jit_kw = {}
+        else:
+            from repro.launch.mesh import lane_shardings
+            self._lane, _ = lane_shardings(mesh)
+            # One lane-sharded spec serves every in/out leaf: [S] shards
+            # its only axis, [S, K, L] its leading axis (trailing dims
+            # unsharded); constants are jaxpr literals and replicate.
+            jit_kw = {"in_shardings": self._lane,
+                      "out_shardings": self._lane}
+
+        self._estimate_jit = jax.jit(self._estimate_impl, **jit_kw)
+        self._select_jit = jax.jit(self._select_impl, **jit_kw)
         self._select_pick_jit = jax.jit(
-            functools.partial(self._select_impl, predictions=False))
-        self._select_hetero_jit = jax.jit(self._select_hetero_impl)
+            functools.partial(self._select_impl, predictions=False),
+            **jit_kw)
+        self._select_hetero_jit = jax.jit(self._select_hetero_impl,
+                                          **jit_kw)
         self._select_hetero_pick_jit = jax.jit(
-            functools.partial(self._select_hetero_impl, predictions=False))
+            functools.partial(self._select_hetero_impl, predictions=False),
+            **jit_kw)
 
     @staticmethod
     def _staircase_weight_matrix(table: ProfileTable) -> np.ndarray:
@@ -409,35 +450,69 @@ class BatchedAlertEngine:
         return (i, j, lat, acc_p, en_p, any_f, relaxed)
 
     # ------------------------------------------------------------------ #
-    # public API (numpy in, numpy out; float64 via scoped x64)           #
+    # public API (numpy in, numpy out; float64 via scoped x64; jax        #
+    # arrays pass through untouched for device-resident callers)         #
     # ------------------------------------------------------------------ #
     @staticmethod
-    def _vec(x, s: int) -> np.ndarray:
+    def _vec(x, s: int, floor: float | None = None):
+        """``[S]`` float64 vector from a scalar, numpy, or jax input.
+
+        jax arrays pass through without a host transfer (``floor`` applied
+        on device) — the contract for device-resident fleet loops; host
+        inputs follow the original numpy path bit for bit.
+        """
+        if isinstance(x, jax.Array):
+            if x.ndim == 0:
+                x = jnp.broadcast_to(x, (s,))
+            return x if floor is None else jnp.maximum(x, floor)
         a = np.asarray(x, np.float64)
-        return np.broadcast_to(a, (s,)) if a.ndim == 0 else a
+        if a.ndim == 0:
+            a = np.broadcast_to(a, (s,))
+        return a if floor is None else np.maximum(a, floor)
+
+    def _n_lanes(self, deadline) -> int:
+        """Infer S from ``deadline`` and enforce the mesh divisibility
+        contract (fleet callers pad to a device multiple, DESIGN.md §6)."""
+        if isinstance(deadline, jax.Array):
+            s = deadline.shape[0] if deadline.ndim else 1
+        else:
+            t = np.asarray(deadline)
+            s = t.shape[0] if t.ndim else 1
+        if self.mesh is not None and s % self.mesh.size:
+            raise ValueError(
+                f"lane-sharded engine needs S divisible by the mesh size "
+                f"({self.mesh.size}); got S={s} — pad with dead lanes")
+        return s
 
     def estimate(self, mu, sigma, phi, deadline, *,
                  active=None) -> EstimateBatch:
         """Score every (stream, model, power) cell.
 
-        ``deadline`` is the effective deadline (overhead already applied by
-        the caller, matching ``AlertController.estimate``); scalars
-        broadcast across streams.  ``active`` (optional ``[S]`` bool mask)
-        sanitises dead lanes and zeroes their output rows.
+        ``mu``/``sigma``/``phi`` are the ``[S]`` filter-state vectors
+        (slow-down mean/deviation, idle-power ratio); ``deadline`` is the
+        effective deadline (overhead already applied by the caller,
+        matching ``AlertController.estimate``); scalars broadcast across
+        streams.  ``active`` (optional ``[S]`` bool mask) sanitises dead
+        lanes and zeroes their output rows.  Returns ``[S, K, L]`` grids.
         """
-        t = np.asarray(deadline, np.float64)
-        s = t.shape[0] if t.ndim else 1
-        t = self._vec(t, s)
-        args = [self._vec(mu, s), np.maximum(self._vec(sigma, s), 1e-6),
-                self._vec(phi, s), t]
+        s = self._n_lanes(deadline)
+        args = [self._vec(mu, s), self._vec(sigma, s, floor=1e-6),
+                self._vec(phi, s), self._vec(deadline, s)]
         if active is not None:
-            args.append(np.broadcast_to(np.asarray(active, bool), (s,)))
+            args.append(active if isinstance(active, jax.Array)
+                        else np.broadcast_to(np.asarray(active, bool),
+                                             (s,)))
         with enable_x64():
             out = self._estimate_jit(*args)
         return EstimateBatch(*(np.asarray(o) for o in out))
 
-    def _resolve_goal_kind(self, goal_kind, s: int) -> np.ndarray:
+    def _resolve_goal_kind(self, goal_kind, s: int):
+        """``[S]`` int64 goal codes from ints, Goals, jax arrays, or the
+        engine default (raises when the engine was built with
+        ``goal=None`` and no per-stream codes were passed)."""
         if goal_kind is not None:
+            if isinstance(goal_kind, jax.Array):
+                return goal_kind            # device caller: trusted int64
             if isinstance(goal_kind, np.ndarray) and \
                     goal_kind.dtype == np.int64:
                 return np.broadcast_to(goal_kind, (s,))  # hot path: no copy
@@ -451,16 +526,18 @@ class BatchedAlertEngine:
     def select(self, mu, sigma, phi, deadline, *,
                accuracy_goal=None, energy_goal=None,
                goal_kind=None, active=None,
-               predictions: bool = True) -> DecisionBatch:
+               predictions: bool = True,
+               as_arrays: bool = False) -> DecisionBatch:
         """One decision per stream.
+
+        ``mu``/``sigma``/``phi`` are ``[S]`` filter-state vectors (scalars
+        broadcast); ``deadline`` is the raw per-stream T_goal — the engine
+        subtracts its configured ``overhead`` (Section 3.2.1 step 2).
 
         ``predictions=False`` skips the per-pick prediction gathers (the
         returned latency/accuracy/energy fields are zero) — fleet callers
         that re-derive outcomes from real delivery use this leaner pass;
         indices, feasibility, and relax codes are identical either way.
-
-        ``deadline`` is the raw per-stream T_goal; the engine subtracts its
-        configured ``overhead`` (Section 3.2.1 step 2).
 
         Homogeneous fleets (no ``goal_kind``/``active``, engine built with
         a ``goal``) dispatch to the PR-1 fast path: min-energy engines need
@@ -477,9 +554,16 @@ class BatchedAlertEngine:
         garbage in every input vector and come back with a deterministic
         null decision (indices 0, zero predictions, ``feasible=False`` off,
         ``relaxed_code=RELAXED_NONE``).
+
+        Device-resident callers (sharded filter banks in a mesh-mode
+        engine) pass jax arrays — these are trusted as ``[S]`` vectors of
+        the right dtype and skip the host-side goal-coverage validation —
+        and set ``as_arrays=True`` so the returned
+        :class:`DecisionBatch` holds lane-sharded jax arrays instead of
+        gathered numpy: with both, a select → feedback tick never touches
+        the host (DESIGN.md §6).
         """
-        t = np.asarray(deadline, np.float64)
-        s = t.shape[0] if t.ndim else 1
+        s = self._n_lanes(deadline)
         if goal_kind is None and active is None and self.goal is not None:
             goal_val = accuracy_goal if self._minimize_energy \
                 else energy_goal
@@ -490,19 +574,24 @@ class BatchedAlertEngine:
             fn = self._select_jit if predictions else self._select_pick_jit
             with enable_x64():
                 out = fn(
-                    self._vec(mu, s),
-                    np.maximum(self._vec(sigma, s), 1e-6),
-                    self._vec(phi, s), self._vec(t, s),
+                    self._vec(mu, s), self._vec(sigma, s, floor=1e-6),
+                    self._vec(phi, s), self._vec(deadline, s),
                     self._vec(goal_val, s))
         else:
             gk = self._resolve_goal_kind(goal_kind, s)
-            act = np.ones(s, bool) if active is None else \
-                np.broadcast_to(np.asarray(active, bool), (s,))
-            if accuracy_goal is None and \
+            if active is None:
+                act = np.ones(s, bool)
+            elif isinstance(active, jax.Array):
+                act = active                # device caller: trusted bool
+            else:
+                act = np.broadcast_to(np.asarray(active, bool), (s,))
+            on_host = isinstance(act, np.ndarray) and \
+                isinstance(gk, np.ndarray)
+            if on_host and accuracy_goal is None and \
                     np.any(act & (gk == GOAL_MIN_ENERGY)):
                 raise ValueError("active minimize-energy lanes need "
                                  "accuracy_goal")
-            if energy_goal is None and \
+            if on_host and energy_goal is None and \
                     np.any(act & (gk == GOAL_MAX_ACCURACY)):
                 raise ValueError("active maximize-accuracy lanes need "
                                  "energy_goal")
@@ -513,10 +602,12 @@ class BatchedAlertEngine:
                 self._select_hetero_pick_jit
             with enable_x64():
                 out = fn(
-                    self._vec(mu, s),
-                    np.maximum(self._vec(sigma, s), 1e-6),
-                    self._vec(phi, s), self._vec(t, s), ag, eg, gk, act)
-        i, j, lat, acc, en, feas, relaxed = (np.asarray(o) for o in out)
+                    self._vec(mu, s), self._vec(sigma, s, floor=1e-6),
+                    self._vec(phi, s), self._vec(deadline, s),
+                    ag, eg, gk, act)
+        if not as_arrays:
+            out = tuple(np.asarray(o) for o in out)
+        i, j, lat, acc, en, feas, relaxed = out
         return DecisionBatch(model_index=i, power_index=j,
                              predicted_latency=lat, predicted_accuracy=acc,
                              predicted_energy=en, feasible=feas,
@@ -535,15 +626,49 @@ class BatchedAlertEngine:
                 + self._select_hetero_pick_jit._cache_size())
 
 
+def _goal_record_step(buf, pos, count, delivered, m, depth):
+    """Jitted masked ring-buffer push for the sharded goal bank — the
+    device twin of :meth:`WindowedGoalBank.record` (donated state)."""
+    rows = jnp.arange(buf.shape[0])
+    cur = buf[rows, pos]
+    buf = buf.at[rows, pos].set(jnp.where(m, delivered, cur))
+    pos = jnp.where(m, (pos + 1) % depth, pos)
+    count = jnp.where(m, jnp.minimum(count + 1, depth), count)
+    return buf, pos, count
+
+
+def _goal_current_step(goal, buf, count, window):
+    """Jitted compensation rule (Eq. 4 effective Q_goal, paper fn.3) for
+    the sharded goal bank — device twin of
+    :meth:`WindowedGoalBank.current_goal`."""
+    total = buf.sum(axis=1)
+    need = goal * window - total
+    remaining = window - count
+    per_input = need - (remaining - 1) * goal
+    return jnp.where(count == 0, goal, per_input)
+
+
 class WindowedGoalBank:
     """Vectorised :class:`~repro.core.controller.WindowedAccuracyGoal`:
     per-stream ring buffers of the last N-1 delivered accuracies (paper
     fn.3) with the same compensation rule as the scalar class.  ``goal``
     may be a scalar (shared Q_goal) or an [S] vector (per-stream goals);
     :meth:`set_goals` resets exactly the streams whose goal changed,
-    mirroring the scalar class's recreate-on-change semantics per lane."""
+    mirroring the scalar class's recreate-on-change semantics per lane.
 
-    def __init__(self, goal, n_streams: int, window: int = 10):
+    ``mesh=`` (1-D lane mesh) keeps the window state — ``goal [S]``,
+    ``buf [S, N-1]``, ``count/pos [S]`` — lane-sharded on device, with the
+    per-tick :meth:`record` running as a donated jitted scatter and
+    :meth:`current_goal` returning a lane-sharded vector that feeds the
+    sharded engine directly (DESIGN.md §6).  Per-lane window *contents*
+    match the host bank exactly; the window *sum* in the compensation rule
+    is an XLA reduce, which may differ from numpy's pairwise summation in
+    the final ulp — callers that pin bitwise goal trajectories (the fleet
+    sim's parity fixtures) keep this one bank on host.
+    """
+
+    def __init__(self, goal, n_streams: int, window: int = 10,
+                 mesh=None):
         self.goal = np.broadcast_to(
             np.asarray(goal, dtype=np.float64), (n_streams,)).copy()
         self.window = int(window)
@@ -551,8 +676,43 @@ class WindowedGoalBank:
         self._buf = np.zeros((n_streams, max(self._depth, 1)))
         self._count = np.zeros(n_streams, dtype=np.int64)
         self._pos = np.zeros(n_streams, dtype=np.int64)
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.core.kalman import _jit_f64_sharded, _lane_put
+            if n_streams % mesh.size:
+                raise ValueError(
+                    f"goal-bank capacity {n_streams} must be a multiple "
+                    f"of the lane-mesh size {mesh.size}")
+            self.goal, self._buf, self._count, self._pos = _lane_put(
+                mesh, self.goal, self._buf, self._count, self._pos)
+            self._record = _jit_f64_sharded(_goal_record_step, mesh,
+                                            donate=(0, 1, 2))
+            self._current = _jit_f64_sharded(_goal_current_step, mesh,
+                                             donate=())
+
+    def _where_reset(self, changed) -> None:
+        """Clear window state on the ``changed`` lanes (device mode)."""
+        from jax.experimental import enable_x64
+        with enable_x64():
+            c = changed[:, None]
+            self._buf = jnp.where(c, 0.0, self._buf)
+            self._count = jnp.where(changed, 0, self._count)
+            self._pos = jnp.where(changed, 0, self._pos)
 
     def set_goals(self, goals) -> None:
+        """Install per-stream goals; lanes whose goal changed get a fresh
+        window (the scalar class's recreate-on-change semantics), other
+        lanes keep their history."""
+        if self.mesh is not None:
+            from jax.experimental import enable_x64
+            from repro.core.kalman import _lane_put
+            new = _lane_put(self.mesh, np.broadcast_to(
+                np.asarray(goals, dtype=np.float64), self.goal.shape))
+            with enable_x64():
+                changed = new != self.goal
+                self.goal = jnp.where(changed, new, self.goal)
+            self._where_reset(changed)
+            return
         new = np.broadcast_to(np.asarray(goals, dtype=np.float64),
                               self.goal.shape)
         changed = new != self.goal
@@ -567,6 +727,21 @@ class WindowedGoalBank:
         history and (optionally) install a new per-lane goal — even one
         equal to the departed tenant's, which ``set_goals`` would keep."""
         lanes = np.asarray(lanes)
+        if self.mesh is not None:
+            from jax.experimental import enable_x64
+            from repro.core.kalman import _lane_put
+            sel = np.zeros(self.goal.shape[0], bool)
+            sel[lanes] = True
+            if goal is not None:
+                new = np.zeros(self.goal.shape[0])
+                new[lanes] = np.asarray(goal, dtype=np.float64)
+                sel_d, new_d = _lane_put(self.mesh, sel, new)
+                with enable_x64():
+                    self.goal = jnp.where(sel_d, new_d, self.goal)
+            else:
+                sel_d = _lane_put(self.mesh, sel)
+            self._where_reset(sel_d)
+            return
         if goal is not None:
             self.goal[lanes] = np.asarray(goal, dtype=np.float64)
         self._buf[lanes] = 0.0
@@ -575,24 +750,44 @@ class WindowedGoalBank:
 
     def grow(self, n_streams: int, goal_fill: float = 0.0) -> None:
         """Extend the bank to ``n_streams`` lanes; new lanes start with a
-        fresh window and ``goal_fill`` (set the real goal on admission)."""
+        fresh window and ``goal_fill`` (set the real goal on admission).
+        Sharded banks grow in mesh-size multiples and round-trip state
+        through host once (amortised, like the filter banks)."""
         extra = int(n_streams) - self.goal.shape[0]
         if extra <= 0:
             return
+        if self.mesh is not None and int(n_streams) % self.mesh.size:
+            raise ValueError(
+                f"sharded goal-bank capacity must grow in multiples of "
+                f"the mesh size {self.mesh.size}; got {n_streams}")
         self.goal = np.concatenate(
-            [self.goal, np.full(extra, goal_fill, dtype=np.float64)])
+            [np.asarray(self.goal),
+             np.full(extra, goal_fill, dtype=np.float64)])
         self._buf = np.concatenate(
-            [self._buf, np.zeros((extra, self._buf.shape[1]))])
+            [np.asarray(self._buf), np.zeros((extra, self._buf.shape[1]))])
         self._count = np.concatenate(
-            [self._count, np.zeros(extra, dtype=np.int64)])
+            [np.asarray(self._count), np.zeros(extra, dtype=np.int64)])
         self._pos = np.concatenate(
-            [self._pos, np.zeros(extra, dtype=np.int64)])
+            [np.asarray(self._pos), np.zeros(extra, dtype=np.int64)])
+        if self.mesh is not None:
+            from repro.core.kalman import _lane_put
+            self.goal, self._buf, self._count, self._pos = _lane_put(
+                self.mesh, self.goal, self._buf, self._count, self._pos)
 
     def record(self, delivered: np.ndarray,
                mask: np.ndarray | None = None) -> None:
+        """Push this tick's delivered accuracies (``[S]``) into the
+        per-lane ring buffers; ``mask`` (``[S]`` bool) freezes masked-out
+        lanes.  Sharded banks run this as one donated jitted scatter."""
         if self._depth == 0:
             return
         s = self._buf.shape[0]
+        if self.mesh is not None:
+            m = np.ones(s, bool) if mask is None else mask
+            self._buf, self._pos, self._count = self._record(
+                self._buf, self._pos, self._count, delivered, m,
+                self._depth)
+            return
         m = np.ones(s, bool) if mask is None else np.asarray(mask, bool)
         rows = np.nonzero(m)[0]
         self._buf[rows, self._pos[rows]] = np.asarray(delivered)[rows]
@@ -600,8 +795,15 @@ class WindowedGoalBank:
         self._count[rows] = np.minimum(self._count[rows] + 1, self._depth)
 
     def current_goal(self) -> np.ndarray:
+        """Per-stream *effective* Q_goal after window compensation
+        (paper fn.3): lanes with an empty window return their raw goal.
+        Sharded banks return a lane-sharded jax vector (feed it straight
+        to the sharded engine — no gather)."""
         if self._depth == 0:
             return self.goal.copy()
+        if self.mesh is not None:
+            return self._current(self.goal, self._buf, self._count,
+                                 self.window)
         total = self._buf.sum(axis=1)
         need = self.goal * self.window - total
         remaining = self.window - self._count

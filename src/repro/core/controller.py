@@ -45,12 +45,22 @@ def normal_cdf(x: np.ndarray) -> np.ndarray:
 
 
 class Goal(enum.Enum):
+    """Which optimisation problem a stream solves: the paper's Eq. 2/4
+    (minimize energy s.t. an accuracy goal) or Eq. 1/5 (maximize accuracy
+    s.t. an energy budget).  Fleet callers encode these as per-lane int
+    codes via :func:`repro.core.batched.goal_codes`."""
+
     MINIMIZE_ENERGY = "minimize_energy"      # Eq. 2 / Eq. 4
     MAXIMIZE_ACCURACY = "maximize_accuracy"  # Eq. 1 / Eq. 5
 
 
 @dataclasses.dataclass(frozen=True)
 class Constraints:
+    """One stream's requirements: ``deadline`` (T_goal, seconds) plus the
+    goal value its :class:`Goal` needs — ``accuracy_goal`` (Q_goal) for
+    minimize-energy streams, ``energy_goal`` (E_goal, joules) for
+    maximize-accuracy streams."""
+
     deadline: float                    # T_goal (seconds)
     accuracy_goal: float | None = None  # Q_goal  (min-energy task)
     energy_goal: float | None = None    # E_goal (J) (max-accuracy task)
@@ -66,6 +76,10 @@ class Constraints:
 
 @dataclasses.dataclass(frozen=True)
 class Decision:
+    """One selection outcome: the picked (model, power-cap) cell, its
+    predicted latency/accuracy/energy, and whether (or which) constraint
+    had to be relaxed (Section 3.3)."""
+
     model_index: int
     power_index: int
     model_name: str
@@ -99,11 +113,14 @@ class WindowedAccuracyGoal:
         self._recent: list[float] = []
 
     def record(self, delivered: float) -> None:
+        """Push one delivered accuracy into the last-N-1 window."""
         self._recent.append(delivered)
         if len(self._recent) > self.window - 1:
             self._recent.pop(0)
 
     def current_goal(self) -> float:
+        """Effective per-input Q_goal after window compensation (the
+        vectorised twin is ``WindowedGoalBank.current_goal``)."""
         if not self._recent:
             return self.goal
         need = self.goal * self.window - sum(self._recent)
@@ -207,6 +224,10 @@ class AlertController:
     # Step 2+4: goal adjustment and selection                             #
     # ------------------------------------------------------------------ #
     def select(self, constraints: Constraints) -> Decision:
+        """One paper decision (steps 2+4): adjust the accuracy goal via
+        the rolling window (fn.3), subtract overhead from the deadline,
+        and pick the Eq. 4/Eq. 5 optimum with Section 3.3 relaxation —
+        the S=1 slice of :meth:`BatchedAlertEngine.select`."""
         q_goal = constraints.accuracy_goal
         if q_goal is not None:
             if self._windowed_goal is None or \

@@ -79,6 +79,7 @@ class StripeSpec:
 
     @staticmethod
     def uniform(total: int, levels: int) -> "StripeSpec":
+        """Equal-width stripes (total/levels channels added per level)."""
         if total % levels != 0:
             raise ValueError(f"total={total} not divisible by levels={levels}")
         step = total // levels
@@ -99,10 +100,12 @@ class StripeSpec:
 
     @property
     def levels(self) -> int:
+        """Number of nesting levels K."""
         return len(self.boundaries) - 1
 
     @property
     def total(self) -> int:
+        """Full (level-K) width of the dimension."""
         return self.boundaries[-1]
 
     def width(self, level: int) -> int:
@@ -114,6 +117,7 @@ class StripeSpec:
         return slice(self.boundaries[k - 1], self.boundaries[k])
 
     def stripe_sizes(self) -> list[int]:
+        """Channels added at each level (stripe widths, 1-based order)."""
         return [self.boundaries[k] - self.boundaries[k - 1]
                 for k in range(1, self.levels + 1)]
 
@@ -180,6 +184,9 @@ def nested_linear_blocks(x: jax.Array, w: jax.Array, in_spec: StripeSpec,
 def nested_linear(x: jax.Array, w: jax.Array, in_spec: StripeSpec,
                   out_spec: StripeSpec, level: int | None = None,
                   backend: str = "blocks") -> jax.Array:
+    """Block-triangular nested matmul dispatch: ``backend`` picks the
+    block-loop, masked-dense, or Pallas-kernel implementation (same
+    nesting semantics; ``level`` truncates the output width)."""
     if backend == "blocks":
         return nested_linear_blocks(x, w, in_spec, out_spec, level)
     if backend == "masked":

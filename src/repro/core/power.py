@@ -50,6 +50,8 @@ class PowerModel:
         return float(np.clip(f, self.min_fraction, 1.0))
 
     def power_at_fraction(self, f: float) -> float:
+        """Operating-point draw (W) at clock fraction ``f`` — the inverse
+        of :meth:`speed_fraction`'s cubic DVFS rule."""
         f = float(np.clip(f, self.min_fraction, 1.0))
         return self.p_idle + (self.p_tdp - self.p_idle) * f ** 3
 

@@ -61,6 +61,9 @@ class ScalarReferenceController:
                 idle_power: float | None = None,
                 delivered_accuracy: float | None = None,
                 profiled_override: float | None = None) -> None:
+        """Paper feedback step for the last decision: Eq. 6 on the
+        latency ratio (miss-inflated when censored), Eq. 8 on the power
+        pair, and the accuracy window (fn.3)."""
         if self._last_decision is None:
             return
         d = self._last_decision
@@ -75,6 +78,9 @@ class ScalarReferenceController:
             self._windowed_goal.record(delivered_accuracy)
 
     def estimate(self, deadline: float) -> _Estimates:
+        """Per-cell [K, L] predictions, the paper formulas verbatim in
+        numpy: Eq. 7 accuracy, Eq. 10 staircase override for anytime
+        rows, Eq. 9 energy."""
         t_train = self.table.latency                      # [K, L]
         mu, sd = self.slowdown.mu, self.slowdown.std
         lat_mean = mu * t_train
@@ -109,6 +115,8 @@ class ScalarReferenceController:
         return _Estimates(lat_mean, lat_std, accuracy, energy, p_finish)
 
     def select(self, constraints: Constraints) -> Decision:
+        """Eq. 4 / Eq. 5 pick with Section 3.3 relaxation — the oracle
+        the batched engine's picks are asserted bit-identical to."""
         deadline = max(constraints.deadline - self.overhead, 1e-9)
         est = self.estimate(deadline)
 

@@ -1,0 +1,140 @@
+"""Control-plane dry-run: the lane-sharded fleet engine end to end.
+
+The model dry-run (``repro.launch.dryrun``) proves the *data plane*
+distributes; this proves the *decision plane* does (DESIGN.md §6): build a
+1-D lane mesh over however many devices exist, drive a mixed-goal,
+churning fleet through the sharded ``BatchedAlertEngine`` + donated
+sharded filter banks for a few ticks, assert pick parity against the
+single-device engine and a flat compile count under churn, and report the
+mesh layout / sharding / throughput as JSON.
+
+Like the model dry-run, the device-count env var must exist before jax is
+imported — the ``__main__`` guard below sets it from ``--devices`` before
+any jax import, so run this as a fresh process
+(``examples/multipod_dryrun.py --fleet`` wraps it):
+
+    PYTHONPATH=src python -m repro.launch.fleet_dryrun \
+        --devices 8 --streams 4096 --ticks 12
+"""
+
+import os
+import sys
+
+if __name__ == "__main__":
+    _n = sys.argv[sys.argv.index("--devices") + 1] \
+        if "--devices" in sys.argv else "8"
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={_n}"
+
+import argparse
+import json
+import time
+
+
+def run_fleet_dryrun(n_streams: int, ticks: int, churn: int,
+                     seed: int = 0) -> dict:
+    """Drive the sharded engine + banks for ``ticks`` churning ticks and
+    return the record (see module docstring).  Imports jax lazily so the
+    caller controls the device-count env var."""
+    import jax
+    import numpy as np
+
+    from repro.core.batched import BatchedAlertEngine
+    from repro.core.kalman import (IdlePowerFilterBank, SlowdownFilterBank,
+                                   observe_fleet)
+    from repro.core.power import PowerModel
+    from repro.core.profiles import Candidate, profile_from_roofline
+    from repro.launch.mesh import make_lane_mesh
+
+    # Self-contained profile (no benchmarks/ import from src/): a small
+    # traditional family + one anytime group, roofline latencies.
+    cands = [Candidate(f"d{i}", flops=(i + 1) * 2e12,
+                       bytes_hbm=(i + 1) * 4e9,
+                       accuracy=0.55 + 0.08 * i) for i in range(3)]
+    cands += [Candidate(f"any-l{m}", flops=(m + 1) * 1e12,
+                        bytes_hbm=(m + 1) * 2e9,
+                        accuracy=0.5 + 0.11 * m, is_anytime_level=True,
+                        anytime_group="g", level=m) for m in range(1, 4)]
+    table = profile_from_roofline(cands, PowerModel(), n_power_buckets=8)
+
+    mesh = make_lane_mesh()
+    n_dev = mesh.size
+    if n_streams % n_dev:
+        n_streams += n_dev - n_streams % n_dev
+    rng = np.random.default_rng(seed)
+    s = n_streams
+    med_lat = float(np.median(table.latency))
+    d = rng.uniform(0.5, 3.0, s) * med_lat
+    qg = rng.uniform(0.5, 0.9, s)
+    eg = rng.uniform(0.5, 3.0, s) * float(np.median(table.run_power)
+                                          * med_lat)
+    gk = rng.integers(0, 2, s)
+    act = rng.random(s) < 0.95
+
+    engine = BatchedAlertEngine(table, None, mesh=mesh)
+    single = BatchedAlertEngine(table, None)
+    slow = SlowdownFilterBank(s, mesh=mesh)
+    idle = IdlePowerFilterBank(s, mesh=mesh)
+    kw = dict(accuracy_goal=qg, energy_goal=eg, predictions=False)
+
+    b_sh = engine.select(slow.mu, slow.sigma, idle.phi, d, goal_kind=gk,
+                         active=act, **kw)
+    b_1d = single.select(np.ones(s), np.full(s, 0.1), np.full(s, 0.3), d,
+                         goal_kind=gk, active=act, **kw)
+    parity = bool(np.array_equal(b_sh.model_index, b_1d.model_index)
+                  and np.array_equal(b_sh.power_index, b_1d.power_index))
+    n0 = engine.n_compiles()
+
+    t0 = time.perf_counter()
+    for _ in range(ticks):
+        live = np.nonzero(act)[0]
+        dep = rng.choice(live, size=min(churn, live.size), replace=False)
+        act[dep] = False
+        arr = rng.choice(np.nonzero(~act)[0],
+                         size=min(churn, s - int(act.sum())),
+                         replace=False)
+        slow.reset_lanes(arr)
+        idle.reset_lanes(arr)
+        gk[arr] = rng.integers(0, 2, arr.size)
+        act[arr] = True
+        batch = engine.select(slow.mu, slow.sigma, idle.phi, d,
+                              goal_kind=gk, active=act, **kw)
+        prof = table.latency[batch.model_index, batch.power_index]
+        observe_fleet(slow, idle, prof * rng.lognormal(0.0, 0.1, s), prof,
+                      idle_power=0.25 * np.ones(s),
+                      active_power=np.ones(s), mask=act)
+    jax.block_until_ready(slow.mu)
+    dt = time.perf_counter() - t0
+
+    return {
+        "status": "ok",
+        "n_devices": n_dev,
+        "mesh_axes": list(mesh.axis_names),
+        "n_streams": s,
+        "ticks": ticks,
+        "churn_per_tick": churn,
+        "state_sharding": str(slow.mu.sharding),
+        "picks_match_single_device": parity,
+        "compiles_flat_under_churn": engine.n_compiles() == n0,
+        "decisions_per_sec": s * ticks / dt,
+    }
+
+
+def main() -> None:
+    """CLI entry point (see module docstring for the env-var contract)."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=8,
+                    help="fake host device count (read before jax import)")
+    ap.add_argument("--streams", type=int, default=4096)
+    ap.add_argument("--ticks", type=int, default=12)
+    ap.add_argument("--churn", type=int, default=64)
+    args = ap.parse_args()
+    rec = run_fleet_dryrun(args.streams, args.ticks, args.churn)
+    print(json.dumps(rec, indent=2))
+    if not (rec["picks_match_single_device"]
+            and rec["compiles_flat_under_churn"]):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,17 +9,56 @@ import) sees the full placeholder fleet.
 Single pod: 16 x 16 = 256 chips, axes (data, model).
 Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — the pod
 axis extends data parallelism across the ICI/DCN boundary.
+
+The *control plane* uses a different, 1-D mesh: ``make_lane_mesh`` lays
+the batched ALERT engine's stream ("lane") axis over devices so fleet
+scoring scales with the hardware it manages (DESIGN.md §6).  The decision
+grid has no cross-lane reduction anywhere, so lane sharding needs no
+collectives — each device scores its lane shard independently.
 """
 
 from __future__ import annotations
 
 import jax
 
+LANE_AXIS = "lanes"
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_lane_mesh(n_devices: int | None = None):
+    """1-D control-plane mesh: the fleet's ``[S]`` lane axis over devices.
+
+    ``n_devices`` defaults to every visible device (CI sets
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` in a subprocess
+    to fake a multi-device host — the flag must be exported before jax is
+    imported).  Pass the mesh to ``BatchedAlertEngine(mesh=...)``, the
+    filter banks, ``FleetSim.run_*(mesh=...)``, or
+    ``FleetAlertServer(mesh=...)``; the single axis is named
+    :data:`LANE_AXIS`.
+    """
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    return jax.make_mesh((n,), (LANE_AXIS,))
+
+
+def lane_shardings(mesh):
+    """(lane-sharded, replicated) :class:`~jax.sharding.NamedSharding`
+    pair for a 1-D lane mesh: ``[S]``-shaped state shards its leading
+    axis over the mesh's single axis (:data:`LANE_AXIS` for meshes built
+    by :func:`make_lane_mesh`); profile constants replicate.  The single
+    source for lane-sharding construction — the engine, the filter
+    banks, and the sharded benchmark all build their shardings here."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if len(mesh.axis_names) != 1:
+        raise ValueError("lane sharding needs a 1-D mesh "
+                         f"(got axes {mesh.axis_names})")
+    return (NamedSharding(mesh, P(mesh.axis_names[0])),
+            NamedSharding(mesh, P()))
 
 
 def batch_axes(mesh) -> tuple[str, ...]:

@@ -34,7 +34,8 @@ from repro.core.batched import (BatchedAlertEngine, GOAL_MAX_ACCURACY,
                                 GOAL_MIN_ENERGY, WindowedGoalBank,
                                 goal_codes)
 from repro.core.controller import AlertController, Constraints, Goal
-from repro.core.kalman import IdlePowerFilterBank, SlowdownFilterBank
+from repro.core.kalman import (IdlePowerFilterBank, SlowdownFilterBank,
+                               observe_fleet)
 from repro.core.power import PowerModel
 from repro.core.profiles import Candidate, ProfileTable
 from repro.serving.engine import ServeEngine
@@ -42,6 +43,10 @@ from repro.serving.engine import ServeEngine
 
 @dataclasses.dataclass
 class ServedInput:
+    """One served request's outcome: the executed anytime level, the
+    booked power cap, realised latency/accuracy/energy, and whether the
+    controller's pick was feasible."""
+
     level: int
     power_cap: float
     latency: float
@@ -90,6 +95,11 @@ def profile_serve_table(engine: ServeEngine, params,
 
 
 class AlertServer:
+    """One request stream over a real model: profile the levels at
+    startup (t^train), then serve inputs one at a time through the
+    :class:`~repro.core.controller.AlertController` loop (S=1 wrapper of
+    the batched engine)."""
+
     def __init__(self, engine: ServeEngine, params,
                  level_accuracies: list[float], goal: Goal,
                  power_model: PowerModel | None = None,
@@ -112,6 +122,9 @@ class AlertServer:
 
     def serve_one(self, prompt: np.ndarray, constraints: Constraints
                   ) -> ServedInput:
+        """Select a (level, power) for this input, run the level's
+        compiled program under the deadline, book energy through the
+        power model, and feed the outcome back to the controller."""
         d = self.controller.select(constraints)
         lvl = self.engine.levels[d.model_index]
         r = self.engine.generate(self.params, prompt, self.gen_tokens,
@@ -155,6 +168,13 @@ class FleetAlertServer:
     every lane is occupied, :meth:`admit` doubles capacity (banks
     :meth:`~repro.core.kalman.SlowdownFilterBank.grow`), which re-traces
     once at the new ``[S]`` — the amortised cost model of a dynamic array.
+
+    ``mesh=`` (1-D lane mesh, :func:`repro.launch.mesh.make_lane_mesh`)
+    shards the scoring pass and all bank state over devices: capacity is
+    rounded up to — and always grows in — mesh-size multiples (the spare
+    lanes start dead and are leased by later admissions), filter/goal
+    state stays lane-sharded on device between ticks, and churn remains
+    re-trace-free (DESIGN.md §6).
     """
 
     def __init__(self, engine: ServeEngine, params,
@@ -165,7 +185,8 @@ class FleetAlertServer:
                  profile_iters: int = 3, q_fail: float = 0.0,
                  prompt_len: int = 8, gen_tokens: int = 4,
                  accuracy_window: int = 10,
-                 start_active: bool = True):
+                 start_active: bool = True,
+                 mesh=None):
         self.engine = engine
         self.params = params
         self.goal = goal
@@ -176,13 +197,19 @@ class FleetAlertServer:
             engine, params, level_accuracies, pm,
             n_power_buckets=n_power_buckets, profile_iters=profile_iters,
             q_fail=q_fail, prompt_len=prompt_len, gen_tokens=gen_tokens)
-        self.scoring = BatchedAlertEngine(self.table, goal)
-        self.slowdown = SlowdownFilterBank(n_streams)
-        self.idle_power = IdlePowerFilterBank(n_streams)
+        self.mesh = mesh
+        # Sharded lane pools round up to a device multiple; the extra
+        # lanes start dead and are recycled by admissions like any other.
+        pad = 0 if mesh is None else (-n_streams) % mesh.size
+        cap = n_streams + pad
+        self.scoring = BatchedAlertEngine(self.table, goal, mesh=mesh)
+        self.slowdown = SlowdownFilterBank(cap, mesh=mesh)
+        self.idle_power = IdlePowerFilterBank(cap, mesh=mesh)
         self.accuracy_window = accuracy_window
         self._goal_bank: WindowedGoalBank | None = None
-        self.active = np.full(n_streams, bool(start_active))
-        self.goal_kinds = np.full(n_streams, goal_codes([goal])[0],
+        self.active = np.concatenate(
+            [np.full(n_streams, bool(start_active)), np.zeros(pad, bool)])
+        self.goal_kinds = np.full(cap, goal_codes([goal])[0],
                                   dtype=np.int64)
         self.history: list[list[ServedInput | None]] = []
 
@@ -206,6 +233,11 @@ class FleetAlertServer:
         free = np.nonzero(~self.active)[0]
         if free.size == 0:
             new_cap = max(2 * self.n_streams, 1)
+            if self.mesh is not None:
+                # Grow in sharded multiples (doubling preserves this as
+                # long as capacity starts as a multiple, which __init__
+                # guarantees; max(..., mesh.size) covers the degenerate 0).
+                new_cap = max(new_cap, self.mesh.size)
             lane = self.n_streams
             self.slowdown.grow(new_cap)
             self.idle_power.grow(new_cap)
@@ -249,7 +281,8 @@ class FleetAlertServer:
             goals[s] = c.accuracy_goal
         if self._goal_bank is None:
             self._goal_bank = WindowedGoalBank(goals, self.n_streams,
-                                               self.accuracy_window)
+                                               self.accuracy_window,
+                                               mesh=self.mesh)
         else:
             self._goal_bank.set_goals(goals)
         return self._goal_bank.current_goal()
@@ -286,6 +319,10 @@ class FleetAlertServer:
         missed = np.zeros(cap, bool)
         accs = np.zeros(cap)
         active_p = np.ones(cap)
+        # One host snapshot of phi for this tick's energy bookkeeping (it
+        # only changes in the end-of-tick observe); per-lane indexing of a
+        # sharded array would otherwise sync once per live stream.
+        phi_host = np.asarray(self.idle_power.phi)
         for s in np.nonzero(act)[0]:
             i = int(batch.model_index[s])
             lvl = self.engine.levels[i]
@@ -300,7 +337,7 @@ class FleetAlertServer:
             f = self.power_model.speed_fraction(cap_w)
             p = self.power_model.power_at_fraction(f)
             run_t = min(lat, float(deadlines[s]))
-            energy = p * run_t + float(self.idle_power.phi[s]) * p * \
+            energy = p * run_t + float(phi_host[s]) * p * \
                 max(float(deadlines[s]) - run_t, 0.0)
             observed[s], missed[s], accs[s] = run_t, miss, acc
             active_p[s] = p
@@ -310,9 +347,12 @@ class FleetAlertServer:
                 energy=float(energy), feasible=bool(batch.feasible[s]))
 
         profiled = self.table.latency[batch.model_index, batch.power_index]
-        self.slowdown.observe(observed, profiled, deadline_missed=missed,
-                              mask=act)
-        self.idle_power.observe(0.25 * active_p, active_p, mask=act)
+        # One fused masked update for both banks (bit-identical per lane
+        # to separate observes, at a single dispatch — the tick's whole
+        # feedback step).
+        observe_fleet(self.slowdown, self.idle_power, observed, profiled,
+                      deadline_missed=missed, idle_power=0.25 * active_p,
+                      active_power=active_p, mask=act)
         if self._goal_bank is not None:
             self._goal_bank.record(accs, mask=act)
         self.history.append(outs)

@@ -19,6 +19,9 @@ _counter = itertools.count()
 
 @dataclasses.dataclass(order=False)
 class Request:
+    """One inference request: an absolute ``deadline``, an opaque
+    ``payload``, and a monotonically increasing ``req_id`` tie-break."""
+
     deadline: float                # absolute time (s)
     payload: Any = None
     arrival: float = 0.0
@@ -26,6 +29,11 @@ class Request:
 
 
 class DeadlineBatcher:
+    """Earliest-deadline-first batch former with fail-fast admission:
+    requests whose deadline can no longer be met (given
+    ``min_feasible_latency``) are rejected at pop time instead of wasting
+    a batch slot."""
+
     def __init__(self, batch_size: int, min_feasible_latency: float = 0.0):
         self.batch_size = batch_size
         self.min_feasible_latency = min_feasible_latency
@@ -33,6 +41,7 @@ class DeadlineBatcher:
         self.rejected: list[Request] = []
 
     def submit(self, req: Request) -> None:
+        """Enqueue one request (EDF heap keyed on deadline)."""
         heapq.heappush(self._heap, (req.deadline, req.req_id, req))
 
     def __len__(self) -> int:

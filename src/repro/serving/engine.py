@@ -24,6 +24,11 @@ from repro.models import transformer as tfm
 
 @dataclasses.dataclass
 class ServeEngine:
+    """Per-level compiled serving programs for one (possibly nested)
+    model: one prefill + one decode executable per anytime level, static
+    shapes, so the controller switches levels between requests at zero
+    recompile cost (DESIGN.md §7)."""
+
     model: Model
     max_len: int
     batch_size: int
@@ -46,11 +51,13 @@ class ServeEngine:
                     pos3d=b.get("pos3d")))
 
     def init_caches(self, level: int | None = None):
+        """Fresh decode caches sized to ``level`` (level-k programs write
+        level-k KV widths)."""
         cfg = self.model.cfg
         if cfg.nest_levels > 1 and level is not None:
             # Level-k programs write level-k KV widths; size the buffers to
             # the level (the controller fixes the level per request, so a
-            # request's cache stays consistent — DESIGN.md §6).
+            # request's cache stays consistent — DESIGN.md §7).
             from repro.models.attention import head_stripe_specs
             _, _, kv_spec = head_stripe_specs(cfg)
             n_kv = kv_spec.width(level) // cfg.head_dim
@@ -102,6 +109,7 @@ class ServeEngine:
     @staticmethod
     def _merge(buffers, prefill):
         def merge(buf, pre):
+            """Copy a prefill cache leaf into the decode buffer leaf."""
             buf, pre = jnp.asarray(buf), jnp.asarray(pre)
             if buf.shape == pre.shape:
                 return pre

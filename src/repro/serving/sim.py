@@ -47,6 +47,10 @@ from repro.core.profiles import ProfileTable
 
 @dataclasses.dataclass(frozen=True)
 class Phase:
+    """One contention phase of an environment trace: ``n_inputs`` draws
+    with mean slow-down ``slowdown``, lognormal jitter ``jitter_cv``, and
+    a heavy tail (paper Table 3 / Fig. 2)."""
+
     n_inputs: int
     slowdown: float = 1.0      # mean xi_true
     jitter_cv: float = 0.08    # lognormal coefficient of variation
@@ -65,6 +69,8 @@ ENVS = {"default": DEFAULT_ENV, "cpu": CPU_ENV, "memory": MEMORY_ENV}
 
 @dataclasses.dataclass
 class TraceResult:
+    """Per-input outcomes of one stream under one scheme (arrays [N])."""
+
     energy: np.ndarray        # [N] J per input
     accuracy: np.ndarray      # [N] delivered accuracy
     latency: np.ndarray       # [N] realised latency (s)
@@ -74,14 +80,17 @@ class TraceResult:
 
     @property
     def mean_energy(self) -> float:
+        """Mean per-input energy (J) — the paper's Table 4 column."""
         return float(self.energy.mean())
 
     @property
     def mean_error(self) -> float:
+        """Mean (1 - delivered accuracy)."""
         return float(1.0 - self.accuracy.mean())
 
     @property
     def miss_rate(self) -> float:
+        """Fraction of inputs that missed their deadline."""
         return float(self.missed.mean())
 
     def violates(self, goal: Goal, cons: Constraints,
@@ -155,6 +164,7 @@ class EnvironmentTrace:
         self.phase_id = np.asarray(phase_id)
 
     def realized_scale(self, n: int) -> float:
+        """True latency scale of input n (xi_true * lambda)."""
         return float(self.xi[n] * self.lam[n])
 
 
@@ -336,6 +346,9 @@ class InferenceSim:
     # -------------------------------------------------------------- #
     def run_scheme(self, scheme: str, goal: Goal,
                    cons: Constraints) -> TraceResult:
+        """Dispatch one paper Table-3 scheme name (``alert``,
+        ``alert_trad``/``alert_dnn``/``alert_power`` ablations,
+        ``oracle``, ``oracle_static``, beyond-paper ``alert_plus``)."""
         if scheme == "alert":
             return self.run_alert(goal, cons, scheme_name="alert")
         if scheme == "alert_plus":
@@ -398,6 +411,7 @@ class FleetResult:
 
     @property
     def n_streams(self) -> int:
+        """Number of streams S in the fleet result."""
         return self.energy.shape[0]
 
     def _window(self, s: int) -> slice:
@@ -407,6 +421,8 @@ class FleetResult:
         return slice(a, a + n)
 
     def stream(self, s: int) -> TraceResult:
+        """Stream s's own local-length :class:`TraceResult`, sliced out
+        of the global tick grid."""
         w = self._window(s)
         budget = None
         if self.budget is not None and (
@@ -418,6 +434,7 @@ class FleetResult:
 
     @property
     def results(self) -> list[TraceResult]:
+        """Every stream's :class:`TraceResult` (see :meth:`stream`)."""
         return [self.stream(s) for s in range(self.n_streams)]
 
     def _live(self, x: np.ndarray) -> np.ndarray:
@@ -425,14 +442,17 @@ class FleetResult:
 
     @property
     def mean_energy(self) -> float:
+        """Mean per-input energy (J) over live cells only."""
         return float(self._live(self.energy).mean())
 
     @property
     def mean_error(self) -> float:
+        """Mean (1 - delivered accuracy) over live cells only."""
         return float(1.0 - self._live(self.accuracy).mean())
 
     @property
     def miss_rate(self) -> float:
+        """Deadline-miss fraction over live cells only."""
         return float(self._live(self.missed).mean())
 
 
@@ -498,6 +518,8 @@ class FleetSim:
                     n_streams: int, *, seed: int = 0,
                     phi_true: float = 0.25, length_cv: float = 0.0,
                     deadline_cv: float = 0.0) -> "FleetSim":
+        """Homogeneous lockstep fleet: ``n_streams`` independently seeded
+        clones of one :class:`Phase` schedule."""
         traces = [EnvironmentTrace(phases, seed=seed + s,
                                    length_cv=length_cv,
                                    deadline_cv=deadline_cv)
@@ -517,19 +539,20 @@ class FleetSim:
                   anytime: bool = True, power_control: bool = True,
                   dnn_control: bool = True, overhead: float = 0.0,
                   paper_faithful_energy: bool = True,
-                  scheme_name: str = "alert") -> FleetResult:
+                  mesh=None, scheme_name: str = "alert") -> FleetResult:
         """Fleet-wide uniform goal/constraints (the Table-3 schemes)."""
         return self.run_streams(
             [goal] * self.n_streams, [cons] * self.n_streams,
             anytime=anytime, power_control=power_control,
             dnn_control=dnn_control, overhead=overhead,
             paper_faithful_energy=paper_faithful_energy,
-            scheme_name=scheme_name)
+            mesh=mesh, scheme_name=scheme_name)
 
     def run_specs(self, specs: Sequence[StreamSpec],
                   **kwargs) -> FleetResult:
         """Run the per-spec goals/constraints (fleet built via
-        :meth:`from_specs`, same stream order)."""
+        :meth:`from_specs`, same stream order).  Keyword arguments —
+        including ``mesh=`` — forward to :meth:`run_streams`."""
         assert len(specs) == self.n_streams
         return self.run_streams([sp.goal for sp in specs],
                                 [sp.constraints for sp in specs], **kwargs)
@@ -539,9 +562,23 @@ class FleetSim:
                     anytime: bool = True, power_control: bool = True,
                     dnn_control: bool = True, overhead: float = 0.0,
                     paper_faithful_energy: bool = True,
-                    scheme_name: str = "alert") -> FleetResult:
+                    mesh=None, scheme_name: str = "alert") -> FleetResult:
         """Advance the whole (possibly ragged, heterogeneous) fleet; one
-        masked engine call per global tick."""
+        masked engine call per global tick.
+
+        ``goals``/``constraints`` are per-stream (length ``n_streams``):
+        every minimize-energy stream needs ``accuracy_goal`` on its
+        Constraints, every maximize-accuracy stream ``energy_goal``.
+
+        ``mesh`` (optional 1-D lane mesh,
+        :func:`repro.launch.mesh.make_lane_mesh`) runs the decision path
+        device-sharded: the engine scores lane shards SPMD and the Kalman
+        banks keep their state lane-sharded with donated updates.  The
+        lane pool is padded to the next mesh-size multiple with
+        permanently dead lanes (masked, never delivered, never observed),
+        so any fleet size works and per-stream results are bit-identical
+        to the unsharded run (DESIGN.md §6).
+        """
         table = self.table
         assert len(goals) == self.n_streams
         assert len(constraints) == self.n_streams
@@ -562,12 +599,17 @@ class FleetSim:
         sub = table.subset(idx)
         engine = BatchedAlertEngine(
             sub, None, overhead=overhead,
-            paper_faithful_energy=paper_faithful_energy)
+            paper_faithful_energy=paper_faithful_energy, mesh=mesh)
         self.engine = engine
         s_n, t_n = self.n_streams, self.n_ticks
+        # Lane padding for the sharded engine: S must divide the mesh, so
+        # the pool gains `pad` always-dead lanes (sanitised inside the
+        # traced pass — they cannot perturb live lanes, see DESIGN.md §5).
+        pad = 0 if mesh is None else (-s_n) % mesh.size
+        s_all = s_n + pad
         gk = goal_codes(goals)                                      # [S]
-        slow = SlowdownFilterBank(s_n)
-        idle = IdlePowerFilterBank(s_n)
+        slow = SlowdownFilterBank(s_all, mesh=mesh)
+        idle = IdlePowerFilterBank(s_all, mesh=mesh)
         has_q = np.asarray([c.accuracy_goal is not None
                             for c in constraints])
         q0 = np.asarray([c.accuracy_goal if c.accuracy_goal is not None
@@ -576,7 +618,25 @@ class FleetSim:
                             for c in constraints])
         e_base = np.asarray([c.energy_goal if c.energy_goal is not None
                              else 0.0 for c in constraints])
-        goal_bank = WindowedGoalBank(q0, s_n) if has_q.any() else None
+        dls = np.asarray([c.deadline for c in constraints])
+        d_scale, act_grid = self.deadline_scale, self.active
+        scale_mat = self.xi * self.lam                              # [S, T]
+        if pad:
+            gk = np.concatenate([gk, np.zeros(pad, dtype=np.int64)])
+            q0 = np.concatenate([q0, np.zeros(pad)])
+            e_base = np.concatenate([e_base, np.zeros(pad)])
+            dls = np.concatenate([dls, np.ones(pad)])
+            ones = np.ones((pad, t_n))
+            d_scale = np.vstack([d_scale, ones])
+            scale_mat = np.vstack([scale_mat, ones])
+            act_grid = np.vstack([act_grid,
+                                  np.zeros((pad, t_n), dtype=bool)])
+        # The goal bank stays on host even under a mesh: its window-sum
+        # compensation is the one place an XLA reduce could differ from
+        # numpy in the final ulp, and the sharded sim pins *bitwise*
+        # equality with the unsharded run (the Kalman banks' recurrences
+        # are pure elementwise chains — those shard exactly).
+        goal_bank = WindowedGoalBank(q0, s_all) if has_q.any() else None
         # System default power: race-to-idle = always the max cap.
         full_power_j = len(table.power_caps) - 1
 
@@ -584,22 +644,20 @@ class FleetSim:
         st = table.staircase_tensors()
         m = st.lvl_lat.shape[1]
 
-        dls = np.asarray([c.deadline for c in constraints])
-        dmat = dls[:, None] * self.deadline_scale                   # [S, T]
+        dmat = dls[:, None] * d_scale                               # [S, T]
         # Energy budgets scale with the per-input time allotment
         # (E_goal = P_goal * T_goal, paper Section 3.1).
-        bmat = e_base[:, None] * self.deadline_scale                # [S, T]
+        bmat = e_base[:, None] * d_scale                            # [S, T]
         out = FleetResult(np.zeros((s_n, t_n)), np.zeros((s_n, t_n)),
                           np.zeros((s_n, t_n)),
                           np.zeros((s_n, t_n), bool), scheme_name,
-                          budget=bmat if has_b.any() else None,
+                          budget=bmat[:s_n] if has_b.any() else None,
                           arrivals=self.arrivals, lengths=self.lengths,
                           active=self.active, has_budget=has_b)
-        scale_mat = self.xi * self.lam                              # [S, T]
-        rows_all = np.arange(s_n)
+        rows_all = np.arange(s_all)
 
         for n in range(t_n):
-            act = self.active[:, n]                                 # [S]
+            act = act_grid[:, n]                                    # [S]
             dvec = dmat[:, n]
             q_goal_eff = q0 if goal_bank is None else \
                 goal_bank.current_goal()
@@ -613,7 +671,7 @@ class FleetSim:
                                   predictions=False)
             i_local = batch.model_index                             # [S]
             j_pick = batch.power_index                              # [S]
-            j_act = np.full(s_n, full_power_j) if not power_control \
+            j_act = np.full(s_all, full_power_j) if not power_control \
                 else j_pick
             i_glob = idx_arr[i_local]
             scale = scale_mat[:, n]
@@ -661,6 +719,9 @@ def run_fleet(table: ProfileTable, specs: Sequence[StreamSpec], *,
               phi_true: float = 0.25, **kwargs) -> FleetResult:
     """One-call heterogeneous fleet run: build a :class:`FleetSim` from
     ``specs`` (per-stream traces, goals, constraints, arrivals) and advance
-    it tick by tick through one masked batched-engine call per tick."""
+    it tick by tick through one masked batched-engine call per tick.
+    Pass ``mesh=`` (see :func:`repro.launch.mesh.make_lane_mesh`) to run
+    the decision path lane-sharded over devices — results are
+    bit-identical either way (DESIGN.md §6)."""
     fleet = FleetSim.from_specs(table, specs, phi_true=phi_true)
     return fleet.run_specs(specs, **kwargs)
