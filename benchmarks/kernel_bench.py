@@ -7,7 +7,7 @@ Measured here (CPU host): per-level wall time of the jitted block-
 triangular path vs the masked-dense path, plus the analytic kernel FLOPs
 staircase (what the Pallas grid executes on TPU).  Also microbenches the
 other kernels' jitted ref paths (TPU wall-times are out of scope for this
-container — see DESIGN.md §8 on how perf is tracked here).
+container — see DESIGN.md §9 on how perf is tracked here).
 """
 
 from __future__ import annotations

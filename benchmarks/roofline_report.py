@@ -58,7 +58,7 @@ def main() -> list[tuple]:
     n_fit = sum(a["fits_16gb"] for a in out["rows"])
     print(f"  {len(out['rows'])} single-pod cells analysed; "
           f"{out['n_expected']} expected per mesh; "
-          f"{n_fit} fit 16GB/chip (see DESIGN.md §8 for the others)")
+          f"{n_fit} fit 16GB/chip (see DESIGN.md §9 for the others)")
     if out["missing"]:
         print("  MISSING:", out["missing"][:10])
     failed = [k for k, v in out["checks"].items() if not v]

@@ -748,6 +748,50 @@ class WindowedGoalBank:
         self._count[lanes] = 0
         self._pos[lanes] = 0
 
+    def export_lanes(self, lanes) -> dict:
+        """Snapshot ``lanes``' window state (goal, ring buffer, count,
+        position) as host arrays — the page-out half of session paging
+        (DESIGN.md §7), bitwise round-trippable through
+        :meth:`import_lanes`.  Sharded banks gather just these lanes."""
+        lanes = np.asarray(lanes)
+        return {"goal": np.asarray(self.goal)[lanes].copy(),
+                "buf": np.asarray(self._buf)[lanes].copy(),
+                "count": np.asarray(self._count)[lanes].copy(),
+                "pos": np.asarray(self._pos)[lanes].copy()}
+
+    def import_lanes(self, lanes, state: dict) -> None:
+        """Restore an :meth:`export_lanes` snapshot into ``lanes`` (the
+        page-in half of session paging): same-shape writes, no re-trace,
+        bitwise lossless.  On a sharded bank this is a masked on-device
+        rewrite."""
+        lanes = np.asarray(lanes)
+        if self.mesh is not None:
+            from jax.experimental import enable_x64
+            from repro.core.kalman import _lane_put
+            s = self.goal.shape[0]
+            sel = np.zeros(s, bool)
+            sel[lanes] = True
+            goal = np.zeros(s)
+            goal[lanes] = state["goal"]
+            buf = np.zeros((s, self._buf.shape[1]))
+            buf[lanes] = state["buf"]
+            count = np.zeros(s, dtype=np.int64)
+            count[lanes] = state["count"]
+            pos = np.zeros(s, dtype=np.int64)
+            pos[lanes] = state["pos"]
+            sel_d, goal_d, buf_d, count_d, pos_d = _lane_put(
+                self.mesh, sel, goal, buf, count, pos)
+            with enable_x64():
+                self.goal = jnp.where(sel_d, goal_d, self.goal)
+                self._buf = jnp.where(sel_d[:, None], buf_d, self._buf)
+                self._count = jnp.where(sel_d, count_d, self._count)
+                self._pos = jnp.where(sel_d, pos_d, self._pos)
+            return
+        self.goal[lanes] = state["goal"]
+        self._buf[lanes] = state["buf"]
+        self._count[lanes] = state["count"]
+        self._pos[lanes] = state["pos"]
+
     def grow(self, n_streams: int, goal_fill: float = 0.0) -> None:
         """Extend the bank to ``n_streams`` lanes; new lanes start with a
         fresh window and ``goal_fill`` (set the real goal on admission).

@@ -386,6 +386,46 @@ class _LaneBank:
         else:
             self.n_updates += m
 
+    def export_lanes(self, lanes) -> dict:
+        """Snapshot ``lanes``' full filter state as host arrays (one entry
+        per ``_state_names`` vector plus ``n_updates``, each ``[len(lanes)]``)
+        — the page-out half of session paging (DESIGN.md §7): a session
+        leaving its lane carries its state to the host store so the lane
+        can be recycled, and a later :meth:`import_lanes` restores it
+        bitwise.  Sharded banks gather just the selected lanes."""
+        lanes = np.asarray(lanes)
+        return {name: np.asarray(getattr(self, name))[lanes].copy()
+                for name in self._state_names + ("n_updates",)}
+
+    def import_lanes(self, lanes, state: dict) -> None:
+        """Restore a :meth:`export_lanes` snapshot into ``lanes`` — the
+        page-in half of session paging.  Same-shape ``[S]`` writes, so the
+        engine's jit cache is untouched (the churn-no-retrace protocol of
+        DESIGN.md §5); round-tripping export → import is bitwise lossless.
+        On a sharded bank this is a masked on-device rewrite."""
+        lanes = np.asarray(lanes)
+        names = self._state_names + ("n_updates",)
+        if self.mesh is not None:
+            import jax.numpy as jnp
+            from jax.experimental import enable_x64
+            sel = np.zeros(self.n_streams, bool)
+            sel[lanes] = True
+            with enable_x64():
+                for name in names:
+                    vals = np.zeros(self.n_streams,
+                                    dtype=np.asarray(state[name]).dtype)
+                    vals[lanes] = state[name]
+                    sel_d, val_d = _lane_put(self.mesh, sel, vals)
+                    setattr(self, name, jnp.where(sel_d, val_d,
+                                                  getattr(self, name)))
+            return
+        first = getattr(self, self._state_names[0])
+        if not first.flags.writeable:  # observe() returns jax-backed views
+            for name in self._state_names:
+                setattr(self, name, getattr(self, name).copy())
+        for name in names:
+            np.asarray(getattr(self, name))[lanes] = state[name]
+
     def reset_lanes(self, lanes) -> None:
         """Reinitialise ``lanes`` (host indices) to the filter priors —
         stream admission into a recycled lane.  Same-shape state: the

@@ -211,6 +211,10 @@ class FleetAlertServer:
             [np.full(n_streams, bool(start_active)), np.zeros(pad, bool)])
         self.goal_kinds = np.full(cap, goal_codes([goal])[0],
                                   dtype=np.int64)
+        # Per-lane Constraints overrides (installed by admit): tenants may
+        # carry their own deadlines/goals instead of sharing the
+        # serve_tick argument.
+        self.lane_constraints: list[Constraints | None] = [None] * cap
         self.history: list[list[ServedInput | None]] = []
 
     @property
@@ -221,7 +225,8 @@ class FleetAlertServer:
     # ------------------------------------------------------------------ #
     # churn: lane lease / release between ticks                          #
     # ------------------------------------------------------------------ #
-    def admit(self, goal: Goal | None = None) -> int:
+    def admit(self, goal: Goal | None = None,
+              constraints: Constraints | None = None) -> int:
         """Lease a lane for a new stream; returns its lane id.
 
         The lane's filter state is re-initialised to the paper's priors and
@@ -229,6 +234,11 @@ class FleetAlertServer:
         departed stream's environment estimate).  Within capacity this
         touches only ``[S]`` vectors — the engine's compiled executables
         are untouched.
+
+        ``constraints`` installs a per-lane override: gateway-style
+        tenants carry their own deadline and accuracy/energy goal, used
+        by :meth:`serve_tick` whenever its ``constraints`` argument (or
+        this lane's entry in it) is ``None``.
         """
         free = np.nonzero(~self.active)[0]
         if free.size == 0:
@@ -249,6 +259,7 @@ class FleetAlertServer:
                 [self.goal_kinds,
                  np.full(new_cap - lane, goal_codes([self.goal])[0],
                          dtype=np.int64)])
+            self.lane_constraints.extend([None] * (new_cap - lane))
         else:
             lane = int(free[0])
         self.slowdown.reset_lanes([lane])
@@ -256,12 +267,14 @@ class FleetAlertServer:
         if self._goal_bank is not None:
             self._goal_bank.reset_lanes([lane])
         self.goal_kinds[lane] = goal_codes([goal or self.goal])[0]
+        self.lane_constraints[lane] = constraints
         self.active[lane] = True
         return lane
 
     def retire(self, lane: int) -> None:
         """Release a lane; its slot is recycled by a later :meth:`admit`."""
         self.active[lane] = False
+        self.lane_constraints[lane] = None
 
     # ------------------------------------------------------------------ #
     def _effective_accuracy_goal(self, constraints) -> np.ndarray:
@@ -287,14 +300,23 @@ class FleetAlertServer:
             self._goal_bank.set_goals(goals)
         return self._goal_bank.current_goal()
 
-    def serve_tick(self, prompts, constraints) -> list[ServedInput | None]:
+    def serve_tick(self, prompts,
+                   constraints=None) -> list[ServedInput | None]:
         """Serve one input per live stream; one engine call scores all of
         them.  ``prompts``/``constraints`` are capacity-length sequences;
-        entries at dead lanes are ignored (``None`` is fine).  Returns one
+        entries at dead lanes are ignored (``None`` is fine).  A ``None``
+        ``constraints`` argument — or a ``None`` entry at a live lane —
+        falls back to the lane's :meth:`admit`-installed override, so
+        gateway tenants carry their own deadlines.  Returns one
         ``ServedInput`` per live lane, ``None`` at dead lanes."""
         cap = self.n_streams
         assert len(prompts) == cap
-        assert len(constraints) == cap
+        if constraints is None:
+            constraints = self.lane_constraints
+        else:
+            assert len(constraints) == cap
+            constraints = [c if c is not None else self.lane_constraints[s]
+                           for s, c in enumerate(constraints)]
         act = self.active.copy()
         deadlines = np.ones(cap)
         e_goals = np.zeros(cap)

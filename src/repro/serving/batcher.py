@@ -4,7 +4,15 @@ Requests carry absolute deadlines; the batcher forms fixed-size batches in
 earliest-deadline-first order and reports the *effective* batch deadline
 (the tightest member's), which is what the ALERT controller schedules
 against.  Late requests that can no longer make any level-1 latency are
-failed fast (admission control) instead of poisoning a batch.
+failed fast (admission control) instead of poisoning a batch, and an
+optional bounded queue sheds load at submit time (backpressure) — the
+traffic gateway (``repro.traffic.gateway``) layers its open-loop admission
+policy on exactly these two hooks (DESIGN.md §7).
+
+Request ids are per-batcher, not process-global: each batcher assigns ids
+from its own counter (deterministic per run — two batchers, or two test
+runs, see identical id sequences), and EDF ties break by submission order
+within the batcher.
 """
 
 from __future__ import annotations
@@ -14,49 +22,78 @@ import heapq
 import itertools
 from typing import Any
 
-_counter = itertools.count()
-
 
 @dataclasses.dataclass(order=False)
 class Request:
     """One inference request: an absolute ``deadline``, an opaque
-    ``payload``, and a monotonically increasing ``req_id`` tie-break."""
+    ``payload``, and a ``req_id`` assigned by the batcher at submit time
+    (deterministic per batcher) unless the caller pre-assigns one."""
 
     deadline: float                # absolute time (s)
     payload: Any = None
     arrival: float = 0.0
-    req_id: int = dataclasses.field(default_factory=lambda: next(_counter))
+    req_id: int | None = None
 
 
 class DeadlineBatcher:
     """Earliest-deadline-first batch former with fail-fast admission:
     requests whose deadline can no longer be met (given
     ``min_feasible_latency``) are rejected at pop time instead of wasting
-    a batch slot."""
+    a batch slot.  ``max_queue`` bounds the queue — submissions beyond it
+    are refused at submit time (backpressure) and recorded in
+    ``overflowed``.  Ties on deadline break by submission order; the id
+    counter is owned by the batcher, so ``req_id`` sequences are
+    deterministic per run and never leak across batchers."""
 
-    def __init__(self, batch_size: int, min_feasible_latency: float = 0.0):
+    def __init__(self, batch_size: int, min_feasible_latency: float = 0.0,
+                 max_queue: int | None = None):
         self.batch_size = batch_size
         self.min_feasible_latency = min_feasible_latency
+        self.max_queue = max_queue
+        self._counter = itertools.count()
         self._heap: list[tuple[float, int, Request]] = []
         self.rejected: list[Request] = []
+        self.overflowed: list[Request] = []
 
-    def submit(self, req: Request) -> None:
-        """Enqueue one request (EDF heap keyed on deadline)."""
-        heapq.heappush(self._heap, (req.deadline, req.req_id, req))
+    def submit(self, req: Request) -> bool:
+        """Enqueue one request (EDF heap keyed on deadline, submission
+        order as tie-break).  Assigns ``req.req_id`` from the batcher's
+        counter when unset.  Returns False — and records the request in
+        ``overflowed`` — when the queue is at ``max_queue`` (backpressure);
+        True otherwise."""
+        if self.max_queue is not None and len(self._heap) >= self.max_queue:
+            self.overflowed.append(req)   # refused: consumes no id/seq
+            return False
+        seq = next(self._counter)
+        if req.req_id is None:
+            req.req_id = seq
+        heapq.heappush(self._heap, (req.deadline, seq, req))
+        return True
 
     def __len__(self) -> int:
         return len(self._heap)
+
+    def pop_one(self, now: float) -> Request | None:
+        """Pop the earliest-deadline feasible request, failing fast the
+        infeasible ones it skips over (they land in ``rejected``).
+        Returns None when the queue drains."""
+        while self._heap:
+            _, _, req = heapq.heappop(self._heap)
+            if req.deadline - now < self.min_feasible_latency:
+                self.rejected.append(req)
+                continue
+            return req
+        return None
 
     def next_batch(self, now: float) -> tuple[list[Request], float] | None:
         """Pop up to batch_size requests (EDF).  Returns (batch, batch
         deadline) or None if empty.  Requests already infeasible at ``now``
         are rejected (fail-fast admission control)."""
         batch: list[Request] = []
-        while self._heap and len(batch) < self.batch_size:
-            _, _, req = heapq.heappop(self._heap)
-            if req.deadline - now < self.min_feasible_latency:
-                self.rejected.append(req)
-                continue
+        while len(batch) < self.batch_size:
+            req = self.pop_one(now)
+            if req is None:
+                break
             batch.append(req)
         if not batch:
             return None

@@ -27,7 +27,7 @@ class ServeEngine:
     """Per-level compiled serving programs for one (possibly nested)
     model: one prefill + one decode executable per anytime level, static
     shapes, so the controller switches levels between requests at zero
-    recompile cost (DESIGN.md §7)."""
+    recompile cost (DESIGN.md §8)."""
 
     model: Model
     max_len: int
@@ -57,7 +57,7 @@ class ServeEngine:
         if cfg.nest_levels > 1 and level is not None:
             # Level-k programs write level-k KV widths; size the buffers to
             # the level (the controller fixes the level per request, so a
-            # request's cache stays consistent — DESIGN.md §7).
+            # request's cache stays consistent — DESIGN.md §8).
             from repro.models.attention import head_stripe_specs
             _, _, kv_spec = head_stripe_specs(cfg)
             n_kv = kv_spec.width(level) // cfg.head_dim

@@ -77,6 +77,9 @@ class TraceResult:
     missed: np.ndarray        # [N] deadline misses (bool)
     scheme: str = ""
     budget: np.ndarray | None = None   # [N] per-input energy budget
+    # (model, power) indices for single-config schemes (oracle_static);
+    # None for adaptive schemes.
+    config: tuple[int, int] | None = None
 
     @property
     def mean_energy(self) -> float:
@@ -313,7 +316,7 @@ class InferenceSim:
             for j in range(len(self.table.power_caps)):
                 res = TraceResult(energy[i, j], acc[i, j], lat[i, j],
                                   missed[i, j], "oracle_static",
-                                  budget=bvec)
+                                  budget=bvec, config=(i, j))
                 # "Satisfying constraints" for the static pick is strict
                 # (zero violating windows); the 10 %-window rule is only
                 # the *reporting* convention (Table 4 superscripts).  A
@@ -371,6 +374,73 @@ class InferenceSim:
         if scheme == "oracle_static":
             return self.run_oracle_static(goal, cons)
         raise ValueError(scheme)
+
+
+# ------------------------------------------------------------------ #
+# Shared delivery kernel: one synchronous engine tick                  #
+# ------------------------------------------------------------------ #
+@dataclasses.dataclass(frozen=True)
+class DeliveredTick:
+    """Realised outcomes of one synchronous delivery tick (arrays [S]):
+    deadline-capped ``latency``, staircase-delivered ``accuracy``
+    (Eq. 10), Eq. 9 ``energy``, the miss vector, plus the feedback pair
+    (``observed``/``profiled`` latencies and the censored ``miss_flag``)
+    implementing the anytime uncensored-observation co-design."""
+
+    latency: np.ndarray     # [S] run time, capped at the deadline
+    accuracy: np.ndarray    # [S] delivered accuracy (staircase Eq. 10)
+    energy: np.ndarray      # [S] Eq. 9 with the platform's true phi
+    missed: np.ndarray      # [S] bool: target level missed its deadline
+    run_power: np.ndarray   # [S] active power of the executed config
+    observed: np.ndarray    # [S] latency observation fed to Eq. 6
+    profiled: np.ndarray    # [S] matching profiled latency
+    miss_flag: np.ndarray   # [S] censored-miss flag for the filter
+
+
+def deliver_tick(table: ProfileTable, st, i_glob: np.ndarray,
+                 j_act: np.ndarray, scale: np.ndarray, dvec: np.ndarray,
+                 phi_true: float, is_anytime: np.ndarray,
+                 profiled_pick: np.ndarray) -> DeliveredTick:
+    """Vectorised delivery for one synchronous tick — the single delivery
+    kernel behind both the closed-loop :class:`FleetSim` tick and the
+    open-loop traffic gateway (``repro.traffic.gateway``): the tick sim is
+    the special case where every lane has an input every round
+    (DESIGN.md §7).
+
+    ``i_glob``/``j_act`` are the executed (model, power) indices into the
+    full ``table``, ``scale`` the true per-input latency scale
+    (xi * lambda), ``dvec`` the effective per-input deadline, ``st`` the
+    table's precomputed staircase tensors.  ``profiled_pick`` is the
+    profiled latency of the *controller's* pick (it differs from
+    ``table.latency[i_glob, j_act]`` only under the ALERT_DNN ablation,
+    where the executed power is forced to the system default) — it seeds
+    the censored feedback path.  A missed deadline whose staircase still
+    completed level k yields an UNCENSORED (observed, profiled) pair from
+    level k instead (paper Section 3.3 co-design).
+    """
+    m = st.lvl_lat.shape[1]
+    lat = table.latency[i_glob, j_act] * scale
+    missed = lat > dvec
+    lvl_lat = st.lvl_lat[i_glob, :, j_act]                      # [S, M]
+    completed = st.lvl_valid[i_glob] & \
+        (lvl_lat * scale[:, None] <= dvec[:, None])
+    any_done = completed.any(axis=1)
+    last_done = (m - 1) - np.argmax(completed[:, ::-1], axis=1)
+    acc = np.where(any_done,
+                   st.lvl_acc[i_glob, last_done], table.q_fail)
+    run_t = np.minimum(lat, dvec)
+    p = table.run_power[i_glob, j_act]
+    energy = p * run_t + phi_true * p * np.maximum(dvec - run_t, 0.0)
+    rows = np.arange(i_glob.shape[0])
+    use_obs = missed & is_anytime[i_glob] & any_done
+    obs_lat = lvl_lat[rows, last_done] * scale
+    obs_prof = lvl_lat[rows, last_done]
+    observed = np.where(use_obs, obs_lat, run_t)
+    profiled = np.where(use_obs, obs_prof, profiled_pick)
+    miss_flag = np.where(use_obs, False, missed)
+    return DeliveredTick(latency=run_t, accuracy=acc, energy=energy,
+                         missed=missed, run_power=p, observed=observed,
+                         profiled=profiled, miss_flag=miss_flag)
 
 
 # ------------------------------------------------------------------ #
@@ -642,7 +712,6 @@ class FleetSim:
 
         # Full-table staircases for vectorised anytime delivery.
         st = table.staircase_tensors()
-        m = st.lvl_lat.shape[1]
 
         dmat = dls[:, None] * d_scale                               # [S, T]
         # Energy budgets scale with the per-input time allotment
@@ -654,7 +723,6 @@ class FleetSim:
                           budget=bmat[:s_n] if has_b.any() else None,
                           arrivals=self.arrivals, lengths=self.lengths,
                           active=self.active, has_budget=has_b)
-        rows_all = np.arange(s_all)
 
         for n in range(t_n):
             act = act_grid[:, n]                                    # [S]
@@ -676,42 +744,25 @@ class FleetSim:
             i_glob = idx_arr[i_local]
             scale = scale_mat[:, n]
 
-            # --- vectorised delivery (staircase Eq. 10 for real) ---
-            lat = table.latency[i_glob, j_act] * scale
-            missed = lat > dvec
-            lvl_lat = st.lvl_lat[i_glob, :, j_act]                  # [S, M]
-            completed = st.lvl_valid[i_glob] & \
-                (lvl_lat * scale[:, None] <= dvec[:, None])
-            any_done = completed.any(axis=1)
-            last_done = (m - 1) - np.argmax(completed[:, ::-1], axis=1)
-            acc = np.where(any_done,
-                           st.lvl_acc[i_glob, last_done], table.q_fail)
-            run_t = np.minimum(lat, dvec)
-            p = table.run_power[i_glob, j_act]
-            energy = p * run_t + self.phi_true * p * \
-                np.maximum(dvec - run_t, 0.0)
+            # --- vectorised delivery + feedback pair (the shared tick
+            # kernel: staircase Eq. 10 for real, anytime co-design — a
+            # missed deadline with a completed level is UNCENSORED) ---
+            d = deliver_tick(table, st, i_glob, j_act, scale, dvec,
+                             self.phi_true, self._is_anytime,
+                             sub.latency[i_local, j_pick])
             live = np.nonzero(act)[0]
-            out.latency[live, n] = run_t[live]
-            out.accuracy[live, n] = acc[live]
-            out.energy[live, n] = energy[live]
-            out.missed[live, n] = missed[live]
+            out.latency[live, n] = d.latency[live]
+            out.accuracy[live, n] = d.accuracy[live]
+            out.energy[live, n] = d.energy[live]
+            out.missed[live, n] = d.missed[live]
 
-            # --- fused feedback (anytime co-design: a missed deadline
-            # with a completed level is an UNCENSORED observation) ---
-            use_obs = missed & self._is_anytime[i_glob] & any_done
-            obs_lat = lvl_lat[rows_all, last_done] * scale
-            obs_prof = lvl_lat[rows_all, last_done]
-            observed = np.where(use_obs, obs_lat, run_t)
-            profiled = np.where(use_obs, obs_prof,
-                                sub.latency[i_local, j_pick])
-            miss_flag = np.where(use_obs, False, missed)
             observe_fleet(
-                slow, idle, observed, profiled,
-                deadline_missed=miss_flag,
-                idle_power=self.phi_true * table.run_power[i_glob, j_act],
+                slow, idle, d.observed, d.profiled,
+                deadline_missed=d.miss_flag,
+                idle_power=self.phi_true * d.run_power,
                 active_power=sub.run_power[i_local, j_pick], mask=act)
             if goal_bank is not None:
-                goal_bank.record(acc, mask=act)
+                goal_bank.record(d.accuracy, mask=act)
         return out
 
 

@@ -1,0 +1,33 @@
+"""Request-level traffic subsystem (DESIGN.md §7).
+
+Three layers turn the tick-synchronous fleet into an arrival-driven
+serving system:
+
+* :mod:`repro.traffic.workloads` — seeded open-loop arrival generators
+  (Poisson, MMPP bursts, diurnal, flash crowd, per-tenant mixtures)
+  emitting deadline-tagged requests per session;
+* :mod:`repro.traffic.gateway` — a discrete-event gateway that
+  multiplexes far more *sessions* than engine lanes onto one
+  :class:`~repro.core.batched.BatchedAlertEngine` via session paging
+  (per-session Kalman/goal state exported and re-imported into recycled
+  lanes, zero re-traces), with EDF admission control and queue
+  backpressure layered on the deadline batcher;
+* :mod:`repro.traffic.loadsweep` — the offered-load sweep harness
+  (goodput / p99 / energy / miss-rate vs load, alert vs hindsight
+  static) recorded in ``BENCH_controller.json``.
+"""
+
+from repro.traffic.workloads import (ArrivalProcess, DiurnalProcess,
+                                     FlashCrowdProcess, MMPPProcess,
+                                     PoissonProcess, Session, TenantSpec,
+                                     TrafficRequest, build_sessions,
+                                     generate_requests)
+from repro.traffic.gateway import GatewayResult, SessionGateway
+from repro.traffic.loadsweep import hindsight_static_config, sweep_loads
+
+__all__ = [
+    "ArrivalProcess", "PoissonProcess", "MMPPProcess", "DiurnalProcess",
+    "FlashCrowdProcess", "TenantSpec", "Session", "TrafficRequest",
+    "build_sessions", "generate_requests", "SessionGateway",
+    "GatewayResult", "hindsight_static_config", "sweep_loads",
+]

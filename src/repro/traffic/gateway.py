@@ -1,0 +1,481 @@
+"""Discrete-event session gateway: many sessions over few engine lanes.
+
+The tick-synchronous :class:`~repro.serving.sim.FleetSim` gives every
+stream a lane and an input every tick.  Production traffic is open-loop:
+requests *arrive* (``repro.traffic.workloads``), far more sessions exist
+than engine lanes, and the controller must hold its constraints as load
+shifts.  :class:`SessionGateway` serves that regime with ONE
+:class:`~repro.core.batched.BatchedAlertEngine` sized to ``n_lanes``:
+
+* **Clock** — rounds fire on a fixed tick grid ``t_k = k * tick`` and
+  each lane is busy until its request completes (or is abandoned at its
+  T_goal, the paper's miss semantics), so ``tick`` may be much finer
+  than a deadline: a round scores whatever is due on whatever lanes are
+  free.  ``tick`` defaults to the largest nominal deadline, which makes
+  every lane free every round — the closed-loop tick sim is exactly
+  that special case with one input due per session per round
+  (DESIGN.md §7).
+* **Admission** — arrivals queue in a
+  :class:`~repro.serving.batcher.DeadlineBatcher`: EDF order, fail-fast
+  rejection of requests whose remaining slack can no longer fit the
+  fastest profiled config, and bounded-queue backpressure at submit.
+* **Session paging** — each served session needs its own Kalman/goal
+  state, but only ``n_lanes`` lanes exist.  The gateway keeps a resident
+  set; a round that needs a non-resident session evicts the
+  least-recently-used resident (``export_lanes`` snapshots its state to
+  a host store) and restores the incomer (``import_lanes``) — same-shape
+  ``[S]`` writes only, so paging reuses the churn-no-retrace protocol of
+  DESIGN.md §5 and the engine never re-traces.
+* **Delivery** — the shared :func:`~repro.serving.sim.deliver_tick`
+  kernel, so per-session outcomes at zero queueing delay are
+  bitwise-identical to an equivalent :class:`FleetSim` run (paging is
+  invisible; ``tests/test_traffic.py`` pins this).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.batched import (BatchedAlertEngine, WindowedGoalBank,
+                                goal_codes)
+from repro.core.kalman import (IdlePowerFilterBank, SlowdownFilterBank,
+                               observe_fleet)
+from repro.core.profiles import ProfileTable
+from repro.serving.batcher import DeadlineBatcher
+from repro.serving.sim import TraceResult, deliver_tick
+from repro.traffic.workloads import (Session, TrafficRequest,
+                                     generate_requests)
+
+# Request disposition codes recorded per offered request.
+SERVED = 0
+REJECTED_INFEASIBLE = 1     # EDF fail-fast: slack below any feasible run
+REJECTED_BACKPRESSURE = 2   # bounded queue was full at arrival
+
+
+@dataclasses.dataclass
+class GatewayResult:
+    """Per-request dispositions and outcomes of one gateway run.
+
+    All arrays are indexed by offered-request row — requests sorted by
+    ``(arrival, req_id)``, which for :func:`~repro.traffic.workloads.
+    generate_requests` workloads coincides with ``req_id`` order.
+    ``status`` holds the disposition codes (:data:`SERVED` /
+    :data:`REJECTED_INFEASIBLE` / :data:`REJECTED_BACKPRESSURE`);
+    outcome fields are zero for unserved requests.  ``sojourn`` is
+    queueing delay + run time — the latency a client observes.
+    """
+
+    sid: np.ndarray
+    index: np.ndarray
+    arrival: np.ndarray
+    status: np.ndarray
+    start: np.ndarray
+    latency: np.ndarray
+    sojourn: np.ndarray
+    missed: np.ndarray
+    accuracy: np.ndarray
+    energy: np.ndarray
+    model_index: np.ndarray
+    power_index: np.ndarray
+    horizon: float = 0.0
+    n_rounds: int = 0
+    pages_in: int = 0
+    pages_out: int = 0
+    n_compiles: tuple = (0, 0)
+
+    @property
+    def offered(self) -> int:
+        """Number of requests the workload offered."""
+        return int(self.status.shape[0])
+
+    @property
+    def served(self) -> np.ndarray:
+        """Bool mask of requests that reached a lane."""
+        return self.status == SERVED
+
+    @property
+    def good(self) -> np.ndarray:
+        """Served AND met the absolute deadline (goodput numerator)."""
+        return self.served & ~self.missed
+
+    @property
+    def goodput(self) -> float:
+        """Deadline-met completions per second of gateway time."""
+        return float(self.good.sum() / max(self.horizon, 1e-12))
+
+    @property
+    def served_miss_rate(self) -> float:
+        """Miss fraction among *served* requests (what admission control
+        is supposed to bound: hopeless requests are shed, not started)."""
+        n = int(self.served.sum())
+        return float(self.missed[self.served].sum() / n) if n else 0.0
+
+    @property
+    def reject_rate(self) -> float:
+        """Fraction of offered requests shed (fail-fast + backpressure)."""
+        return float((self.status != SERVED).mean()) if self.offered \
+            else 0.0
+
+    @property
+    def slo_miss_rate(self) -> float:
+        """Fraction of offered requests that did NOT complete in
+        deadline (served-but-missed plus every rejection)."""
+        return float(1.0 - self.good.sum() / self.offered) \
+            if self.offered else 0.0
+
+    def percentile_sojourn(self, q: float) -> float:
+        """Sojourn-time percentile (seconds) over served requests."""
+        s = self.sojourn[self.served]
+        return float(np.percentile(s, q)) if s.size else 0.0
+
+    @property
+    def mean_energy_served(self) -> float:
+        """Mean energy (J) per served request."""
+        n = int(self.served.sum())
+        return float(self.energy[self.served].mean()) if n else 0.0
+
+    @property
+    def energy_per_good(self) -> float:
+        """Total served energy divided by deadline-met completions —
+        the efficiency axis of the load sweep."""
+        n = int(self.good.sum())
+        return float(self.energy[self.served].sum() / n) if n else \
+            float("inf")
+
+    def stream(self, sid: int) -> TraceResult:
+        """Session ``sid``'s served outcomes in input-index order, as a
+        :class:`~repro.serving.sim.TraceResult` — comparable (bitwise, at
+        zero queueing delay) with a FleetSim stream."""
+        sel = np.nonzero((self.sid == sid) & self.served)[0]
+        sel = sel[np.argsort(self.index[sel], kind="stable")]
+        return TraceResult(self.energy[sel], self.accuracy[sel],
+                           self.latency[sel], self.missed[sel],
+                           scheme="gateway")
+
+
+class SessionGateway:
+    """Open-loop traffic over one fixed-size batched scoring engine.
+
+    The engine, filter banks, goal bank, and lane pool are built once at
+    ``n_lanes`` and reused across :meth:`run` calls (a load sweep pays
+    one trace for its whole grid); every run resets the lane pool and
+    session store.  ``policy="alert"`` drives the full controller;
+    ``policy="static"`` executes one fixed ``(model, power)`` config
+    through the identical clock/queue/delivery path (the hindsight
+    ``oracle_static`` baseline of ``repro.traffic.loadsweep``).
+    """
+
+    def __init__(self, table: ProfileTable, n_lanes: int, *,
+                 phi_true: float = 0.25, overhead: float = 0.0,
+                 tick: float | None = None,
+                 max_queue: int | None = None,
+                 min_feasible_latency: float | None = None,
+                 accuracy_window: int = 10):
+        self.table = table
+        self.n_lanes = int(n_lanes)
+        self.phi_true = float(phi_true)
+        self.tick = tick
+        self.max_queue = max_queue
+        self.min_feasible_latency = float(table.latency.min()) \
+            if min_feasible_latency is None else float(min_feasible_latency)
+        self.accuracy_window = int(accuracy_window)
+        self.engine = BatchedAlertEngine(table, None, overhead=overhead)
+        self.slow = SlowdownFilterBank(self.n_lanes)
+        self.idle = IdlePowerFilterBank(self.n_lanes)
+        self.goal_bank = WindowedGoalBank(
+            np.zeros(self.n_lanes), self.n_lanes, accuracy_window)
+        self._st = table.staircase_tensors()
+        groups = table.anytime_groups()
+        self._is_anytime = np.zeros(len(table.candidates), bool)
+        self._is_anytime[sorted({i for g in groups.values()
+                                 for i in g})] = True
+        self._reset_lane_pool()
+
+    # -------------------------------------------------------------- #
+    # session paging                                                  #
+    # -------------------------------------------------------------- #
+    def _reset_lane_pool(self) -> None:
+        """Fresh lane pool + empty session store (between runs).  The
+        ``[S]`` shapes are untouched, so the engine's jit cache
+        survives."""
+        self._resident = np.full(self.n_lanes, -1, dtype=np.int64)
+        self._lane_of: dict[int, int] = {}
+        self._store: dict[int, dict] = {}
+        self._goal_kinds = np.zeros(self.n_lanes, dtype=np.int64)
+        self._last_used = np.zeros(self.n_lanes, dtype=np.int64)
+        self._busy_until = np.zeros(self.n_lanes)
+        self.pages_in = self.pages_out = 0
+        all_lanes = np.arange(self.n_lanes)
+        self.slow.reset_lanes(all_lanes)
+        self.idle.reset_lanes(all_lanes)
+        self.goal_bank.reset_lanes(all_lanes, goal=np.zeros(self.n_lanes))
+
+    def _page_in(self, sids: Sequence[int],
+                 sessions: dict[int, Session], round_k: int,
+                 now: float) -> np.ndarray:
+        """Make every session in ``sids`` (distinct) lane-resident;
+        returns their lanes aligned with ``sids``.
+
+        Non-residents land in free idle lanes first, then evict the
+        least-recently-used *idle* residents not needed this round (a
+        busy lane's session is mid-service and cannot move): the
+        evictees' filter + goal-window state is snapshotted to the host
+        store (one batched ``export_lanes``) and the incomers' state
+        restored (one batched ``import_lanes`` for paged sessions, one
+        ``reset_lanes`` for first-time sessions) — same-shape writes
+        only, so paging can never re-trace the engine (DESIGN.md §7).
+        """
+        needed = set(sids)
+        lanes = np.empty(len(sids), dtype=np.int64)
+        missing: list[int] = []           # position in sids
+        for pos, sid in enumerate(sids):
+            lane = self._lane_of.get(sid, -1)
+            lanes[pos] = lane
+            if lane < 0:
+                missing.append(pos)
+        if missing:
+            idle = self._busy_until <= now
+            free = [int(x) for x in
+                    np.nonzero((self._resident < 0) & idle)[0]]
+            n_evict = len(missing) - len(free)
+            if n_evict > 0:
+                evictable = [(int(self._last_used[ln]), ln)
+                             for ln in range(self.n_lanes)
+                             if idle[ln] and self._resident[ln] >= 0
+                             and int(self._resident[ln]) not in needed]
+                evictable.sort()
+                ev_lanes = [ln for _, ln in evictable[:n_evict]]
+                slow_s = self.slow.export_lanes(ev_lanes)
+                idle_s = self.idle.export_lanes(ev_lanes)
+                goal_s = self.goal_bank.export_lanes(ev_lanes)
+                for k, ln in enumerate(ev_lanes):
+                    old = int(self._resident[ln])
+                    self._store[old] = {
+                        "slow": {n: v[k:k + 1] for n, v in slow_s.items()},
+                        "idle": {n: v[k:k + 1] for n, v in idle_s.items()},
+                        "goal": {n: v[k:k + 1] for n, v in goal_s.items()},
+                    }
+                    del self._lane_of[old]
+                    self._resident[ln] = -1
+                    self.pages_out += 1
+                free += ev_lanes
+            paged_lanes, paged_sids, fresh_lanes, fresh_sids = \
+                [], [], [], []
+            for pos, ln in zip(missing, free):
+                sid = sids[pos]
+                lanes[pos] = ln
+                self._resident[ln] = sid
+                self._lane_of[sid] = ln
+                if sid in self._store:
+                    paged_lanes.append(ln)
+                    paged_sids.append(sid)
+                else:
+                    fresh_lanes.append(ln)
+                    fresh_sids.append(sid)
+                self._goal_kinds[ln] = goal_codes([sessions[sid].goal])[0]
+            if paged_lanes:
+                cat = lambda part: {
+                    n: np.concatenate([self._store[s][part][n]
+                                       for s in paged_sids])
+                    for n in self._store[paged_sids[0]][part]}
+                self.slow.import_lanes(paged_lanes, cat("slow"))
+                self.idle.import_lanes(paged_lanes, cat("idle"))
+                self.goal_bank.import_lanes(paged_lanes, cat("goal"))
+                for s in paged_sids:
+                    del self._store[s]
+                self.pages_in += len(paged_lanes)
+            if fresh_lanes:
+                self.slow.reset_lanes(fresh_lanes)
+                self.idle.reset_lanes(fresh_lanes)
+                self.goal_bank.reset_lanes(
+                    fresh_lanes,
+                    goal=[sessions[s].constraints.accuracy_goal or 0.0
+                          for s in fresh_sids])
+        self._last_used[lanes] = round_k
+        return lanes
+
+    # -------------------------------------------------------------- #
+    # clock                                                           #
+    # -------------------------------------------------------------- #
+    @staticmethod
+    def _round_of(arrival: float, tick: float) -> int:
+        """Smallest round k with ``k * tick >= arrival`` (float-safe:
+        a request arriving exactly on a round boundary is served in that
+        round, which is what makes zero queueing delay *exactly* zero)."""
+        k = max(int(np.ceil(arrival / tick)), 0)
+        while k * tick < arrival:
+            k += 1
+        while k > 0 and (k - 1) * tick >= arrival:
+            k -= 1
+        return k
+
+    # -------------------------------------------------------------- #
+    # the event loop                                                  #
+    # -------------------------------------------------------------- #
+    def run(self, sessions: Sequence[Session],
+            requests: list[TrafficRequest] | None = None, *,
+            policy: str = "alert",
+            static_config: tuple[int, int] | None = None) -> GatewayResult:
+        """Serve one workload to completion; returns per-request
+        dispositions and outcomes.
+
+        ``requests`` defaults to ``generate_requests(sessions)``.
+        ``policy="static"`` runs the fixed ``static_config`` (model,
+        power) through the same clock/queue/delivery path with no
+        controller state (used for the hindsight-static baseline).
+        """
+        if policy not in ("alert", "static"):
+            raise ValueError(policy)
+        if policy == "static" and static_config is None:
+            raise ValueError("policy='static' needs static_config=(i, j)")
+        sess = {s.sid: s for s in sessions}
+        if requests is None:
+            requests = generate_requests(sessions)
+        # The event loop needs arrival order; caller-supplied lists may
+        # be merged/unsorted, so sort defensively (stable — equal keys
+        # keep their input order) and index results by sorted row.
+        requests = sorted(
+            requests,
+            key=lambda r: (r.arrival,
+                           0 if r.req_id is None else r.req_id))
+        row_of = {id(r): k for k, r in enumerate(requests)}
+        n = len(requests)
+        out = GatewayResult(
+            sid=np.asarray([r.sid for r in requests], dtype=np.int64),
+            index=np.asarray([r.index for r in requests], dtype=np.int64),
+            arrival=np.asarray([r.arrival for r in requests]),
+            status=np.full(n, REJECTED_BACKPRESSURE, dtype=np.int64),
+            start=np.zeros(n), latency=np.zeros(n), sojourn=np.zeros(n),
+            missed=np.zeros(n, bool), accuracy=np.zeros(n),
+            energy=np.zeros(n), model_index=np.zeros(n, dtype=np.int64),
+            power_index=np.zeros(n, dtype=np.int64))
+        if n == 0:
+            return out
+        tick = self.tick if self.tick is not None else \
+            max(r.rel_deadline for r in requests)
+        self._reset_lane_pool()
+        queue = DeadlineBatcher(batch_size=self.n_lanes,
+                                min_feasible_latency=
+                                self.min_feasible_latency,
+                                max_queue=self.max_queue)
+        lanes_arange = np.arange(self.n_lanes)
+        ri = 0
+        round_k = 0
+        n_rounds = 0
+        last_completion = 0.0
+        while ri < n or len(queue):
+            if not len(queue):
+                round_k = max(round_k,
+                              self._round_of(requests[ri].arrival, tick))
+            now = round_k * tick
+            # --- arrivals due by this round (backpressure at submit) ---
+            while ri < n and requests[ri].arrival <= now:
+                req = requests[ri]
+                if not queue.submit(req):
+                    out.status[row_of[id(req)]] = REJECTED_BACKPRESSURE
+                ri += 1
+            # --- EDF pop onto the lanes that are free this round, at
+            # most one request per session (a session is sequential:
+            # whether queued behind itself or mid-service on a busy
+            # lane, its later requests wait).  The scan is bounded: a
+            # run of blocked same-session requests longer than the
+            # deferral budget waits for the next round instead of
+            # churning the whole backlog through the heap every round.
+            n_rej = len(queue.rejected)
+            avail = int((self._busy_until <= now).sum())
+            batch: list[TrafficRequest] = []
+            seen: set[int] = set()
+            deferred: list[TrafficRequest] = []
+            defer_budget = 4 * self.n_lanes
+            while len(batch) < avail and len(deferred) <= defer_budget:
+                req = queue.pop_one(now)
+                if req is None:
+                    break
+                lane = self._lane_of.get(req.sid, -1)
+                if req.sid in seen or \
+                        (lane >= 0 and self._busy_until[lane] > now):
+                    deferred.append(req)
+                    continue
+                seen.add(req.sid)
+                batch.append(req)
+            for req in deferred:
+                queue.submit(req)
+            for req in queue.rejected[n_rej:]:   # failed fast this round
+                out.status[row_of[id(req)]] = REJECTED_INFEASIBLE
+                out.start[row_of[id(req)]] = now
+            if batch:
+                last_completion = max(last_completion, self._serve_round(
+                    batch, sess, now, round_k, policy, static_config,
+                    lanes_arange, row_of, out))
+                n_rounds += 1
+            round_k += 1
+        out.horizon = max(last_completion,
+                          float(out.arrival[-1]) if n else 0.0)
+        out.n_rounds = n_rounds
+        out.pages_in, out.pages_out = self.pages_in, self.pages_out
+        out.n_compiles = self.engine.n_compiles()
+        return out
+
+    def _serve_round(self, batch, sess, now: float, round_k: int,
+                     policy: str, static_config, lanes_arange, row_of,
+                     out: GatewayResult) -> float:
+        """One synchronous round: page the batch's sessions in, score all
+        lanes with one masked engine call (or the fixed static config),
+        deliver through the shared tick kernel, absorb feedback.  Returns
+        the round's last completion time."""
+        lanes = self._page_in([r.sid for r in batch], sess, round_k, now)
+        act = np.zeros(self.n_lanes, bool)
+        dvec = np.ones(self.n_lanes)
+        e_goal = np.zeros(self.n_lanes)
+        scale = np.ones(self.n_lanes)
+        for req, lane in zip(batch, lanes):
+            s = sess[req.sid]
+            act[lane] = True
+            # Effective T_goal: the nominal allotment minus queueing
+            # delay — computed from the *relative* deadline so a request
+            # served on its arrival instant sees its nominal bitwise.
+            dvec[lane] = req.rel_deadline - (now - req.arrival)
+            e_goal[lane] = (s.constraints.energy_goal or 0.0) * \
+                s.trace.deadline_scale[req.index]
+            scale[lane] = s.trace.xi[req.index] * s.trace.lam[req.index]
+        if policy == "alert":
+            b = self.engine.select(
+                self.slow.mu, self.slow.sigma, self.idle.phi, dvec,
+                accuracy_goal=self.goal_bank.current_goal(),
+                energy_goal=e_goal, goal_kind=self._goal_kinds,
+                active=act, predictions=False)
+            i_pick, j_pick = b.model_index, b.power_index
+        else:
+            i_pick = np.full(self.n_lanes, static_config[0],
+                             dtype=np.int64)
+            j_pick = np.full(self.n_lanes, static_config[1],
+                             dtype=np.int64)
+        d = deliver_tick(self.table, self._st, i_pick, j_pick, scale,
+                         dvec, self.phi_true, self._is_anytime,
+                         self.table.latency[i_pick, j_pick])
+        if policy == "alert":
+            observe_fleet(self.slow, self.idle, d.observed, d.profiled,
+                          deadline_missed=d.miss_flag,
+                          idle_power=self.phi_true * d.run_power,
+                          active_power=self.table.run_power[i_pick,
+                                                            j_pick],
+                          mask=act)
+            self.goal_bank.record(d.accuracy, mask=act)
+        last = now
+        for req, lane in zip(batch, lanes):
+            rid = row_of[id(req)]
+            out.status[rid] = SERVED
+            out.start[rid] = now
+            out.latency[rid] = d.latency[lane]
+            out.sojourn[rid] = (now - req.arrival) + d.latency[lane]
+            out.missed[rid] = d.missed[lane]
+            out.accuracy[rid] = d.accuracy[lane]
+            out.energy[rid] = d.energy[lane]
+            out.model_index[rid] = i_pick[lane]
+            out.power_index[rid] = j_pick[lane]
+            self._busy_until[lane] = now + float(d.latency[lane])
+            last = max(last, now + float(d.latency[lane]))
+        return last

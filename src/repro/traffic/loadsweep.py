@@ -1,0 +1,117 @@
+"""Offered-load sweep harness: goodput / p99 / energy / miss-rate vs load.
+
+For each load point the tenant mixture's arrival rates are multiplied by
+the load factor, one workload is generated (seeded — both schemes see the
+SAME requests, the paired-comparison discipline of the simulator), and
+the gateway serves it twice: the full ALERT controller, and the
+hindsight-static baseline (:func:`hindsight_static_config` — the best
+single traditional ``(model, power)`` pick in the sense of
+``InferenceSim.run_oracle_static``, chosen on the tenant's nominal
+environment, then executed through the identical clock/queue/delivery
+path).  ``benchmarks/controller_bench.py bench_traffic`` records the
+sweep in ``BENCH_controller.json``.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.controller import Constraints, Goal
+from repro.core.profiles import ProfileTable
+from repro.serving.sim import EnvironmentTrace, InferenceSim, Phase
+from repro.traffic.gateway import SessionGateway
+from repro.traffic.workloads import TenantSpec, build_sessions, \
+    generate_requests
+
+
+def hindsight_static_config(table: ProfileTable,
+                            phases: tuple[Phase, ...], goal: Goal,
+                            cons: Constraints,
+                            seed: int = 0) -> tuple[int, int]:
+    """Best single traditional ``(model, power)`` config for this
+    environment in hindsight — literally
+    :meth:`~repro.serving.sim.InferenceSim.run_oracle_static`'s pick
+    (strict zero-violating-windows first, then the loose 10 % rule,
+    then the goal's objective) on a nominal trace of ``phases``,
+    returning the winning *indices* so the gateway can execute the
+    config under real load."""
+    trace = EnvironmentTrace(phases, seed=seed)
+    res = InferenceSim(table, trace).run_oracle_static(goal, cons)
+    return res.config
+
+
+def sweep_loads(table: ProfileTable, mix: Sequence[TenantSpec],
+                loads: Sequence[float], *, n_lanes: int,
+                horizon: float, seed: int = 0,
+                max_queue: int | None = None, tick: float | None = None,
+                schemes: Sequence[str] = ("alert", "oracle_static"),
+                deadline_cv: float = 0.0) -> list[dict]:
+    """Sweep offered load over ``loads`` for each scheme.
+
+    One :class:`~repro.traffic.gateway.SessionGateway` per scheme serves
+    every load point (so the whole sweep compiles the scoring pass
+    exactly once, and a re-trace anywhere shows up in the recorded
+    ``n_compiles``).  Returns one record per load point with offered
+    rate, and per scheme: goodput, p50/p99 sojourn, served-miss /
+    reject / SLO-miss rates, energy per request and per good request,
+    paging and compile counters.
+    """
+    gw = SessionGateway(table, n_lanes, max_queue=max_queue, tick=tick) \
+        if "alert" in schemes else None
+    gw_static = gw_noadm = None
+    static_cfg: tuple[int, int] | None = None
+    if "oracle_static" in schemes:
+        if len(mix) > 1:
+            raise ValueError("oracle_static baseline needs a "
+                             "single-tenant mix (one static config)")
+        static_cfg = hindsight_static_config(
+            table, mix[0].phases, mix[0].goal, mix[0].constraints,
+            seed=seed)
+        gw_static = SessionGateway(table, n_lanes, max_queue=max_queue,
+                                   tick=tick)
+    if "alert_no_admission" in schemes:
+        # Ablation probe: same controller, admission control disabled
+        # (no fail-fast, unbounded queue) — quantifies what shedding
+        # buys.
+        gw_noadm = SessionGateway(table, n_lanes, max_queue=None,
+                                  tick=tick, min_feasible_latency=0.0)
+    rows = []
+    for li, load in enumerate(loads):
+        sessions = build_sessions([t.scaled(load) for t in mix], horizon,
+                                  seed=seed + 7919 * li,
+                                  deadline_cv=deadline_cv)
+        requests = generate_requests(sessions)
+        offered_rps = len(requests) / horizon
+        row = {"load": float(load), "offered": len(requests),
+               "offered_rps": offered_rps, "n_sessions": len(sessions),
+               "n_lanes": n_lanes, "schemes": {}}
+        for scheme in schemes:
+            if scheme == "alert":
+                res = gw.run(sessions, requests)
+            elif scheme == "alert_no_admission":
+                res = gw_noadm.run(sessions, requests)
+            elif scheme == "oracle_static":
+                res = gw_static.run(sessions, requests, policy="static",
+                                    static_config=static_cfg)
+            else:
+                raise ValueError(scheme)
+            row["schemes"][scheme] = {
+                "goodput_rps": res.goodput,
+                "good": int(res.good.sum()),
+                "served": int(res.served.sum()),
+                "p50_sojourn_s": res.percentile_sojourn(50),
+                "p99_sojourn_s": res.percentile_sojourn(99),
+                "served_miss_rate": res.served_miss_rate,
+                "reject_rate": res.reject_rate,
+                "slo_miss_rate": res.slo_miss_rate,
+                "mean_energy_served_j": res.mean_energy_served,
+                "energy_per_good_j": res.energy_per_good,
+                "n_rounds": res.n_rounds,
+                "pages_in": res.pages_in,
+                "pages_out": res.pages_out,
+                "n_compiles": list(res.n_compiles),
+            }
+        rows.append(row)
+    return rows

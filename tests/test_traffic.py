@@ -1,0 +1,484 @@
+"""Traffic-subsystem tests: workload determinism, EDF batcher properties
+(hypothesis), bank paging round-trips, gateway-vs-FleetSim bitwise parity
+through session paging, admission control under overload, and the load
+sweep."""
+
+import numpy as np
+import pytest
+
+from benchmarks.common import deadline_range, family_table
+from repro.core.batched import WindowedGoalBank
+from repro.core.controller import Constraints, Goal
+from repro.core.kalman import (IdlePowerFilterBank, SlowdownFilterBank,
+                               observe_fleet)
+from repro.serving.batcher import DeadlineBatcher, Request
+from repro.serving.sim import CPU_ENV, ENVS, EnvironmentTrace, FleetSim
+from repro.traffic import (DiurnalProcess, FlashCrowdProcess, MMPPProcess,
+                           PoissonProcess, Session, SessionGateway,
+                           TenantSpec, build_sessions, generate_requests,
+                           sweep_loads)
+from repro.traffic.gateway import REJECTED_INFEASIBLE
+from tests._hypothesis_compat import given, settings, st
+
+
+@pytest.fixture(scope="module")
+def table():
+    return family_table("image")
+
+
+# ------------------------------------------------------------------ #
+# workloads                                                           #
+# ------------------------------------------------------------------ #
+class TestWorkloads:
+    def test_processes_deterministic_and_in_horizon(self):
+        for proc in (PoissonProcess(3.0), MMPPProcess(1.0, 8.0, 5.0, 2.0),
+                     DiurnalProcess(3.0, 0.5, 20.0),
+                     FlashCrowdProcess(1.0, 10.0, 10.0, 5.0)):
+            a = proc.times(40.0, np.random.default_rng(3))
+            b = proc.times(40.0, np.random.default_rng(3))
+            np.testing.assert_array_equal(a, b)
+            assert np.all((a >= 0) & (a < 40.0))
+
+    def test_poisson_rate_and_scaling(self):
+        rng = np.random.default_rng(0)
+        n = PoissonProcess(5.0).times(200.0, rng).shape[0]
+        assert 800 < n < 1200          # ~1000 +- 6 sigma
+        n2 = PoissonProcess(5.0).scaled(2.0).times(
+            200.0, np.random.default_rng(0)).shape[0]
+        assert n2 > 1.5 * n
+
+    def test_flash_crowd_spikes_inside_window(self):
+        proc = FlashCrowdProcess(rate=0.5, spike_rate=20.0,
+                                 spike_start=10.0, spike_len=5.0)
+        ts = proc.times(30.0, np.random.default_rng(1))
+        in_spike = ((ts >= 10.0) & (ts < 15.0)).sum()
+        assert in_spike > 0.6 * ts.shape[0]
+
+    def test_build_sessions_tags_and_request_ids(self):
+        mix = [TenantSpec("minE", Goal.MINIMIZE_ENERGY,
+                          Constraints(deadline=0.2, accuracy_goal=0.7),
+                          PoissonProcess(2.0), n_sessions=3),
+               TenantSpec("maxQ", Goal.MAXIMIZE_ACCURACY,
+                          Constraints.from_power_budget(0.2, 170.0),
+                          MMPPProcess(), n_sessions=2)]
+        sessions = build_sessions(mix, 20.0, seed=4)
+        assert [s.tenant for s in sessions] == \
+            ["minE"] * 3 + ["maxQ"] * 2
+        assert all(s.trace.n == s.n_requests for s in sessions)
+        reqs = generate_requests(sessions)
+        # ids are 0..N-1 in arrival order, deterministically
+        assert [r.req_id for r in reqs] == list(range(len(reqs)))
+        arr = np.asarray([r.arrival for r in reqs])
+        assert np.all(np.diff(arr) >= 0)
+        reqs2 = generate_requests(build_sessions(mix, 20.0, seed=4))
+        assert [(r.sid, r.index, r.arrival) for r in reqs] == \
+            [(r.sid, r.index, r.arrival) for r in reqs2]
+
+
+# ------------------------------------------------------------------ #
+# EDF batcher (satellite: per-batcher ids + property tests)           #
+# ------------------------------------------------------------------ #
+class TestBatcherProperties:
+    def test_request_ids_deterministic_per_batcher(self):
+        """Two batchers (or two runs) see identical id sequences — the
+        counter is per-batcher, not process-global."""
+        ids = []
+        for _ in range(2):
+            b = DeadlineBatcher(batch_size=4)
+            for d in (3.0, 1.0, 2.0):
+                r = Request(deadline=d)
+                b.submit(r)
+                ids.append(r.req_id)
+        assert ids == [0, 1, 2, 0, 1, 2]
+
+    @settings(max_examples=60, deadline=None)
+    @given(deadlines=st.lists(st.floats(0.01, 100.0), min_size=1,
+                              max_size=40),
+           batch_size=st.integers(1, 8))
+    def test_batch_deadline_is_tightest_member(self, deadlines,
+                                               batch_size):
+        b = DeadlineBatcher(batch_size=batch_size)
+        for d in deadlines:
+            b.submit(Request(deadline=d))
+        got = b.next_batch(now=0.0)
+        assert got is not None
+        batch, dl = got
+        assert dl == min(r.deadline for r in batch)
+        assert dl == min(deadlines)        # EDF: head is globally tightest
+
+    @settings(max_examples=60, deadline=None)
+    @given(deadlines=st.lists(st.floats(0.01, 100.0), min_size=1,
+                              max_size=40),
+           batch_size=st.integers(1, 8))
+    def test_no_starvation_of_earliest_deadline(self, deadlines,
+                                                batch_size):
+        """Draining the queue batch by batch serves requests in
+        non-decreasing deadline order — the earliest deadline is always
+        in the very next batch."""
+        b = DeadlineBatcher(batch_size=batch_size)
+        for d in deadlines:
+            b.submit(Request(deadline=d))
+        popped = []
+        while True:
+            got = b.next_batch(now=0.0)
+            if got is None:
+                break
+            popped.extend(r.deadline for r in got[0])
+        assert popped == sorted(deadlines)
+        assert not b.rejected
+
+    @settings(max_examples=60, deadline=None)
+    @given(deadlines=st.lists(st.floats(0.0, 10.0), min_size=1,
+                              max_size=40),
+           now=st.floats(0.0, 10.0), min_lat=st.floats(0.0, 5.0))
+    def test_fail_fast_requests_never_batched(self, deadlines, now,
+                                              min_lat):
+        b = DeadlineBatcher(batch_size=4, min_feasible_latency=min_lat)
+        for d in deadlines:
+            b.submit(Request(deadline=d))
+        served = []
+        while True:
+            got = b.next_batch(now=now)
+            if got is None:
+                break
+            served.extend(got[0])
+        assert all(r.deadline - now >= min_lat for r in served)
+        assert all(r.deadline - now < min_lat for r in b.rejected)
+        assert len(served) + len(b.rejected) == len(deadlines)
+
+    def test_backpressure_bounds_queue(self):
+        b = DeadlineBatcher(batch_size=4, max_queue=3)
+        oks = [b.submit(Request(deadline=float(d))) for d in range(5)]
+        assert oks == [True] * 3 + [False] * 2
+        assert len(b) == 3 and len(b.overflowed) == 2
+
+
+# ------------------------------------------------------------------ #
+# bank paging primitives                                              #
+# ------------------------------------------------------------------ #
+class TestExportImport:
+    def _scrambled_banks(self, s=8, ticks=5, seed=0):
+        rng = np.random.default_rng(seed)
+        slow = SlowdownFilterBank(s)
+        idle = IdlePowerFilterBank(s)
+        goal = WindowedGoalBank(rng.uniform(0.5, 0.9, s), s, window=4)
+        for _ in range(ticks):
+            mask = rng.random(s) < 0.8
+            observe_fleet(slow, idle, rng.uniform(0.5, 2.0, s),
+                          rng.uniform(0.5, 2.0, s),
+                          deadline_missed=rng.random(s) < 0.2,
+                          idle_power=rng.uniform(0.1, 0.5, s),
+                          active_power=rng.uniform(0.5, 1.5, s),
+                          mask=mask)
+            goal.record(rng.uniform(0.4, 1.0, s), mask=mask)
+        return slow, idle, goal
+
+    def test_round_trip_bitwise_identity(self):
+        """export -> reset (another tenant scrambles the lane) -> import
+        restores every state vector bit for bit."""
+        slow, idle, goal = self._scrambled_banks()
+        lanes = [1, 3, 6]
+        snap = {"slow": slow.export_lanes(lanes),
+                "idle": idle.export_lanes(lanes),
+                "goal": goal.export_lanes(lanes)}
+        before = {
+            "slow": {n: np.asarray(getattr(slow, n)).copy()
+                     for n in slow._state_names + ("n_updates",)},
+            "idle": {n: np.asarray(getattr(idle, n)).copy()
+                     for n in idle._state_names + ("n_updates",)},
+            "goal": {"goal": goal.goal.copy(), "buf": goal._buf.copy(),
+                     "count": goal._count.copy(),
+                     "pos": goal._pos.copy()},
+        }
+        # another tenant occupies + scrambles the lanes
+        slow.reset_lanes(lanes)
+        idle.reset_lanes(lanes)
+        goal.reset_lanes(lanes, goal=[0.1, 0.2, 0.3])
+        observe_fleet(slow, idle, np.full(8, 1.7), np.ones(8),
+                      idle_power=np.full(8, 0.3), active_power=np.ones(8))
+        goal.record(np.full(8, 0.5))
+        snap2 = {"slow": slow.export_lanes([0, 2, 4, 5, 7]),
+                 "idle": idle.export_lanes([0, 2, 4, 5, 7]),
+                 "goal": goal.export_lanes([0, 2, 4, 5, 7])}
+        del snap2
+        slow.import_lanes(lanes, snap["slow"])
+        idle.import_lanes(lanes, snap["idle"])
+        goal.import_lanes(lanes, snap["goal"])
+        for n, want in before["slow"].items():
+            np.testing.assert_array_equal(
+                np.asarray(getattr(slow, n))[lanes], want[lanes], err_msg=n)
+        for n, want in before["idle"].items():
+            np.testing.assert_array_equal(
+                np.asarray(getattr(idle, n))[lanes], want[lanes], err_msg=n)
+        np.testing.assert_array_equal(goal.goal[lanes],
+                                      before["goal"]["goal"][lanes])
+        np.testing.assert_array_equal(goal._buf[lanes],
+                                      before["goal"]["buf"][lanes])
+        np.testing.assert_array_equal(goal._count[lanes],
+                                      before["goal"]["count"][lanes])
+        np.testing.assert_array_equal(goal._pos[lanes],
+                                      before["goal"]["pos"][lanes])
+
+    def test_import_does_not_touch_other_lanes(self):
+        slow, idle, goal = self._scrambled_banks(seed=3)
+        others = [0, 2, 4, 5, 7]
+        keep = {n: np.asarray(getattr(slow, n)).copy()[others]
+                for n in slow._state_names}
+        snap = slow.export_lanes([1])
+        slow.import_lanes([3], snap)
+        for n in slow._state_names:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(slow, n))[others], keep[n], err_msg=n)
+
+    def test_round_trip_on_one_device_mesh(self):
+        """Sharded banks page bitwise too (1-device lane mesh)."""
+        from repro.launch.mesh import make_lane_mesh
+        mesh = make_lane_mesh(1)
+        slow = SlowdownFilterBank(4, mesh=mesh)
+        slow.observe(np.asarray([1.2, 0.8, 1.5, 1.0]), np.ones(4))
+        want = {n: np.asarray(getattr(slow, n)).copy()
+                for n in slow._state_names + ("n_updates",)}
+        snap = slow.export_lanes([1, 2])
+        slow.reset_lanes([1, 2])
+        slow.import_lanes([1, 2], snap)
+        for n, w in want.items():
+            np.testing.assert_array_equal(np.asarray(getattr(slow, n)), w,
+                                          err_msg=n)
+
+    def test_goal_bank_round_trip_on_one_device_mesh(self):
+        """The windowed-goal bank's sharded page path round-trips too."""
+        from repro.launch.mesh import make_lane_mesh
+        mesh = make_lane_mesh(1)
+        goal = WindowedGoalBank([0.6, 0.7, 0.8, 0.9], 4, window=3,
+                                mesh=mesh)
+        goal.record(np.asarray([0.5, 0.6, 0.7, 0.8]))
+        goal.record(np.asarray([0.9, 0.8, 0.7, 0.6]),
+                    mask=np.asarray([True, False, True, False]))
+        want = {n: np.asarray(getattr(goal, n)).copy()
+                for n in ("goal", "_buf", "_count", "_pos")}
+        snap = goal.export_lanes([0, 3])
+        goal.reset_lanes([0, 3], goal=[0.1, 0.1])
+        goal.import_lanes([0, 3], snap)
+        for n, w in want.items():
+            np.testing.assert_array_equal(np.asarray(getattr(goal, n)), w,
+                                          err_msg=n)
+        # compensation rule still computes from the restored window (the
+        # sharded sum may differ from numpy in the last ulp — DESIGN §6's
+        # documented exception — hence allclose, not array_equal)
+        np.testing.assert_allclose(np.asarray(goal.current_goal()),
+                                   np.asarray(want["goal"]) * 3
+                                   - np.asarray(want["_buf"]).sum(1)
+                                   - (3 - np.asarray(want["_count"])
+                                      - 1) * np.asarray(want["goal"]),
+                                   rtol=0, atol=1e-12)
+
+
+# ------------------------------------------------------------------ #
+# gateway: paging-invisible parity + admission under overload         #
+# ------------------------------------------------------------------ #
+def _short_trace(env, seed, n, deadline_cv=0.0):
+    tr = EnvironmentTrace(env, seed=seed, deadline_cv=deadline_cv)
+    tr.n = n
+    tr.xi, tr.lam = tr.xi[:n], tr.lam[:n]
+    tr.deadline_scale = tr.deadline_scale[:n]
+    return tr
+
+
+class TestGatewayParity:
+    def test_low_load_bitwise_equals_fleetsim_through_paging(self, table):
+        """THE acceptance property: 6 sessions multiplexed over 3 lanes
+        with zero queueing delay — per-session outcomes are
+        bitwise-identical to independent FleetSim runs even though every
+        session's Kalman/goal state pages in and out of recycled lanes
+        between rounds, and paging never re-traces the engine."""
+        dl = float(deadline_range(table, 5)[3])
+        tick = dl * 2.5
+        sessions = []
+        for sid in range(6):
+            tr = _short_trace(ENVS["cpu"] if sid % 2 else ENVS["memory"],
+                              40 + sid, 25, deadline_cv=0.1)
+            # odd/even sessions alternate rounds -> 6 sessions never fit
+            # the 3 lanes without paging
+            arrivals = (2 * np.arange(25) + (sid % 2)) * tick
+            goal = Goal.MINIMIZE_ENERGY if sid % 3 else \
+                Goal.MAXIMIZE_ACCURACY
+            cons = Constraints(deadline=dl, accuracy_goal=0.8) \
+                if sid % 3 else Constraints.from_power_budget(dl, 170.0)
+            sessions.append(Session(sid, "t", goal, cons, arrivals, tr))
+        gw = SessionGateway(table, 3, tick=tick)
+        res = gw.run(sessions)
+        assert res.served.all()
+        assert res.pages_in > 50 and res.pages_out > 50, \
+            "scenario must actually exercise paging"
+        assert res.n_compiles == (0, 1), \
+            "session paging must never re-trace the engine"
+        for s in sessions:
+            fr = FleetSim(table, [s.trace]).run_streams([s.goal],
+                                                        [s.constraints])
+            got, want = res.stream(s.sid), fr.stream(0)
+            np.testing.assert_array_equal(got.energy, want.energy,
+                                          err_msg=f"sid {s.sid}")
+            np.testing.assert_array_equal(got.accuracy, want.accuracy)
+            np.testing.assert_array_equal(got.latency, want.latency)
+            np.testing.assert_array_equal(got.missed, want.missed)
+
+    def test_reused_gateway_is_reset_between_runs(self, table):
+        """A second run on the same gateway sees fresh state (and still
+        zero re-traces) — the load sweep leans on this."""
+        dl = float(deadline_range(table, 5)[3])
+        tr = _short_trace(ENVS["cpu"], 9, 10)
+        sess = [Session(0, "t", Goal.MINIMIZE_ENERGY,
+                        Constraints(deadline=dl, accuracy_goal=0.75),
+                        np.arange(10) * dl, tr)]
+        gw = SessionGateway(table, 2, tick=dl)
+        a = gw.run(sess)
+        b = gw.run(sess)
+        np.testing.assert_array_equal(a.energy, b.energy)
+        np.testing.assert_array_equal(a.accuracy, b.accuracy)
+        assert b.n_compiles == (0, 1)
+
+    def test_static_policy_matches_fixed_config_delivery(self, table):
+        """policy='static' executes exactly the fixed config."""
+        dl = float(deadline_range(table, 5)[3])
+        tr = _short_trace(ENVS["default"], 2, 8)
+        sess = [Session(0, "t", Goal.MINIMIZE_ENERGY,
+                        Constraints(deadline=dl, accuracy_goal=0.7),
+                        np.arange(8) * dl, tr)]
+        gw = SessionGateway(table, 2, tick=dl)
+        res = gw.run(sess, policy="static", static_config=(1, 2))
+        assert res.served.all()
+        assert np.all(res.model_index[res.served] == 1)
+        assert np.all(res.power_index[res.served] == 2)
+        want = table.latency[1, 2] * tr.xi * tr.lam
+        got = res.stream(0)
+        np.testing.assert_array_equal(got.latency,
+                                      np.minimum(want, dl))
+
+    def test_static_policy_requires_config(self, table):
+        gw = SessionGateway(table, 2)
+        with pytest.raises(ValueError, match="static_config"):
+            gw.run([], policy="static")
+
+
+class TestGatewayOverload:
+    @pytest.fixture(scope="class")
+    def overload(self, table):
+        dl = float(deadline_range(table, 5)[3])
+        cons = Constraints(deadline=dl, accuracy_goal=0.78)
+        n_lanes, s = 16, 64
+        rate = 8.0 * (n_lanes / dl) / s      # ~8x a conservative capacity
+        mix = [TenantSpec("minE", Goal.MINIMIZE_ENERGY, cons,
+                          PoissonProcess(rate), n_sessions=s,
+                          phases=CPU_ENV)]
+        sessions = build_sessions(mix, 10 * dl, seed=11)
+        requests = generate_requests(sessions)
+        return table, dl, n_lanes, sessions, requests
+
+    def test_admission_sheds_and_bounds_served_miss(self, overload):
+        table, dl, n_lanes, sessions, requests = overload
+        gw = SessionGateway(table, n_lanes, tick=dl / 4,
+                            max_queue=4 * n_lanes)
+        res = gw.run(sessions, requests)
+        gw_off = SessionGateway(table, n_lanes, tick=dl / 4,
+                                max_queue=None, min_feasible_latency=0.0)
+        off = gw_off.run(sessions, requests)
+        assert res.reject_rate > 0.05, "overload must shed load"
+        assert (res.status == REJECTED_INFEASIBLE).any()
+        # admission control keeps the *served* miss rate below the
+        # no-admission ablation's (hopeless requests are shed, not run)
+        assert res.served_miss_rate < off.served_miss_rate
+        assert res.goodput > 0
+        assert res.n_compiles == (0, 1)
+
+    def test_backpressure_rejections_recorded(self, overload):
+        table, dl, n_lanes, sessions, requests = overload
+        gw = SessionGateway(table, n_lanes, tick=dl / 4, max_queue=8)
+        res = gw.run(sessions, requests)
+        from repro.traffic.gateway import REJECTED_BACKPRESSURE
+        assert (res.status == REJECTED_BACKPRESSURE).any()
+        assert res.offered == len(requests)
+        served = int(res.served.sum())
+        assert served + int((res.status != 0).sum()) == res.offered
+
+
+# ------------------------------------------------------------------ #
+# load sweep                                                          #
+# ------------------------------------------------------------------ #
+class TestLoadSweep:
+    def test_sweep_runs_end_to_end(self, table):
+        dl = float(deadline_range(table, 5)[3])
+        cons = Constraints(deadline=dl, accuracy_goal=0.78)
+        n_lanes, s = 16, 32
+        base = 0.5 * (n_lanes / dl) / s
+        mix = [TenantSpec("minE", Goal.MINIMIZE_ENERGY, cons,
+                          PoissonProcess(base), n_sessions=s,
+                          phases=CPU_ENV)]
+        rows = sweep_loads(table, mix, [0.5, 4.0], n_lanes=n_lanes,
+                           horizon=8 * dl, seed=3,
+                           max_queue=4 * n_lanes, tick=dl / 4)
+        assert len(rows) == 2
+        for r in rows:
+            a = r["schemes"]["alert"]
+            st_ = r["schemes"]["oracle_static"]
+            assert a["n_compiles"] == [0, 1]
+            assert a["goodput_rps"] > 0 and st_["goodput_rps"] > 0
+        # at the comfortable load point ALERT's adaptation wins energy
+        low = rows[0]["schemes"]
+        assert low["alert"]["energy_per_good_j"] < \
+            low["oracle_static"]["energy_per_good_j"]
+
+    def test_multi_tenant_static_rejected(self, table):
+        c = Constraints(deadline=0.1, accuracy_goal=0.7)
+        mix = [TenantSpec("a", Goal.MINIMIZE_ENERGY, c, PoissonProcess(1.0)),
+               TenantSpec("b", Goal.MINIMIZE_ENERGY, c, PoissonProcess(1.0))]
+        with pytest.raises(ValueError, match="single-tenant"):
+            sweep_loads(table, mix, [1.0], n_lanes=4, horizon=1.0)
+
+
+# ------------------------------------------------------------------ #
+# FleetAlertServer constraints override (satellite)                   #
+# ------------------------------------------------------------------ #
+class TestFleetServerConstraintOverride:
+    def test_admit_installs_per_lane_constraints(self):
+        import jax
+
+        from repro.configs.base import ModelConfig
+        from repro.models.registry import build_model
+        from repro.serving.alert_server import FleetAlertServer
+        from repro.serving.engine import ServeEngine
+
+        cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                          n_heads=4, n_kv_heads=4, head_dim=8, d_ff=64,
+                          vocab=64, nest_levels=2, dtype="float32",
+                          attn_chunk=32)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        engine = ServeEngine(model, max_len=32, batch_size=2)
+        srv = FleetAlertServer(engine, params,
+                               level_accuracies=[0.6, 0.9],
+                               goal=Goal.MAXIMIZE_ACCURACY, n_streams=2,
+                               profile_iters=1, gen_tokens=3,
+                               start_active=False)
+        budget = float(np.median(srv.table.run_power)) * \
+            float(np.max(srv.table.latency)) * 2.0
+        c0 = Constraints(deadline=10.0, energy_goal=budget)
+        c1 = Constraints(deadline=5.0, accuracy_goal=0.7,
+                         energy_goal=budget)
+        lane0 = srv.admit(constraints=c0)
+        lane1 = srv.admit(goal=Goal.MINIMIZE_ENERGY, constraints=c1)
+        prompt = np.zeros((2, 4), np.int32)
+        # no serve_tick constraints at all: lanes carry their own
+        outs = srv.serve_tick([prompt, prompt])
+        assert outs[lane0] is not None and outs[lane1] is not None
+        # a per-call entry overrides only that lane; None entries fall
+        # back to the admit-installed constraints
+        outs = srv.serve_tick([prompt, prompt],
+                              [Constraints(deadline=20.0,
+                                           energy_goal=budget), None])
+        assert outs[lane0] is not None and outs[lane1] is not None
+        # retiring clears the override: a live lane without constraints
+        # anywhere must raise
+        srv.retire(lane1)
+        srv.admit()     # same lane, no constraints installed
+        with pytest.raises(ValueError, match="Constraints"):
+            srv.serve_tick([prompt, prompt], [c0, None])
