@@ -17,6 +17,12 @@ sojourn / energy / miss-rate for ALERT vs the hindsight-static baseline
 goodput, the admission-control miss bound under overload, and zero
 re-traces across the whole sweep.
 
+``bench_kernel_select`` compares the fused Pallas decision kernel
+(``BatchedAlertEngine(backend="pallas")`` → `repro.kernels.alert_select`,
+docs/KERNELS.md) against the XLA select at S=65536 under churn,
+asserting bitwise pick parity and flat compile counts on both backends
+(timing recorded only — interpret mode on CPU hosts).
+
 ``bench_sharded`` additionally spawns a subprocess with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the flag must be
 exported before jax imports, hence the isolation) and compares the
@@ -316,6 +322,98 @@ def bench_churn(s: int = 4096, churn_frac: float = 0.10,
     }
 
 
+def bench_kernel_select(s: int = 65536, ticks: int = 12, seed: int = 9,
+                        block_s: int = 8192) -> dict:
+    """Fused Pallas ``alert_select`` vs the XLA select at fleet scale.
+
+    One heterogeneous pick-only tick (the fleet hot path) at S streams,
+    XLA engine vs ``backend="pallas"`` — same runtime-array contract, so
+    the tick loop below also flips goals and churns the mask every tick
+    and asserts NEITHER backend re-traces.  Pick parity is asserted
+    bitwise on every tick (predictions parity once, on the warmup tick).
+
+    Honesty note (mirrors the sharded row): off-TPU the kernel runs in
+    Pallas **interpret mode** — the grid/BlockSpec semantics execute as
+    XLA ops with per-grid-step dispatch overhead, so CPU timings measure
+    the kernel *executing correctly*, not its TPU roofline; the record
+    carries ``interpret``/``platform`` so the trajectory file keeps the
+    regimes distinguishable.  The analytic roofline for the compiled
+    kernel is ``alert_select_cost`` (docs/KERNELS.md).
+    """
+    import jax
+
+    from benchmarks.common import deadline_range, family_table
+    from repro.kernels.alert_select import (_default_interpret,
+                                            alert_select_cost)
+
+    table = family_table("image")
+    dls = deadline_range(table, 5)
+    rng = np.random.default_rng(seed)
+    med_en = float(np.median(table.run_power) * np.median(table.latency))
+    xla = BatchedAlertEngine(table, None)
+    pal = BatchedAlertEngine(table, None, backend="pallas",
+                             pallas_block_s=block_s)
+    mus, sds, phis = random_state(rng, s)
+    d = rng.choice(dls, s)
+    gk = rng.integers(0, 2, s)
+    act = rng.random(s) < 0.95
+    kw = dict(accuracy_goal=rng.uniform(0.5, 0.9, s),
+              energy_goal=rng.uniform(0.5, 3.0, s) * med_en)
+    # Warmup + full-prediction bitwise parity check.
+    bx = xla.select(mus, sds, phis, d, goal_kind=gk, active=act, **kw)
+    bp = pal.select(mus, sds, phis, d, goal_kind=gk, active=act, **kw)
+    same = all(np.array_equal(getattr(bx, f), getattr(bp, f))
+               for f in ("model_index", "power_index", "feasible",
+                         "relaxed_code", "predicted_latency",
+                         "predicted_accuracy", "predicted_energy"))
+    kw["predictions"] = False
+    xla.select(mus, sds, phis, d, goal_kind=gk, active=act, **kw)
+    pal.select(mus, sds, phis, d, goal_kind=gk, active=act, **kw)
+    n0x, n0p = xla.n_compiles(), pal.n_compiles()
+    t_x, t_p = [], []
+    for _ in range(ticks):
+        # churn: flip some lanes and goals (runtime arrays — no retrace)
+        flip = rng.integers(0, s, max(s // 50, 1))
+        act[flip] = ~act[flip]
+        gk = np.where(rng.random(s) < 0.1, 1 - gk, gk)
+        t0 = time.perf_counter()
+        bx = xla.select(mus, sds, phis, d, goal_kind=gk, active=act, **kw)
+        t_x.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        bp = pal.select(mus, sds, phis, d, goal_kind=gk, active=act, **kw)
+        t_p.append(time.perf_counter() - t0)
+        same = same and \
+            np.array_equal(bx.model_index, bp.model_index) and \
+            np.array_equal(bx.power_index, bp.power_index) and \
+            np.array_equal(bx.feasible, bp.feasible) and \
+            np.array_equal(bx.relaxed_code, bp.relaxed_code)
+    # Both the full-prediction and pick-only executables were warmed, so
+    # a flat cache reads [0 estimate, 2 select] on both engines.
+    no_retrace = (xla.n_compiles() == n0x and pal.n_compiles() == n0p
+                  and pal.n_compiles()[1] == 2)
+    k, l = table.latency.shape
+    cost = alert_select_cost(s, k, l)
+    return {
+        "n_streams": s,
+        "k": k, "l": l,
+        "block_s": block_s,
+        "ticks": ticks,
+        "picks_identical": bool(same),
+        # The kernel's own fallback predicate, so the recorded regime
+        # can never diverge from what actually executed.
+        "interpret": _default_interpret(),
+        "platform": jax.default_backend(),
+        "xla_us_per_decision": min(t_x) / s * 1e6,
+        "pallas_us_per_decision": min(t_p) / s * 1e6,
+        "xla_decisions_per_sec": s / min(t_x),
+        "pallas_decisions_per_sec": s / min(t_p),
+        "pallas_vs_xla": min(t_x) / min(t_p),
+        "no_retrace": bool(no_retrace),
+        "n_compiles": list(pal.n_compiles()),
+        "roofline": cost,
+    }
+
+
 def _sharded_child(s: int, ticks: int, reps: int) -> dict:
     """Runs INSIDE the fake-multi-device subprocess (see
     :func:`bench_sharded`): one lockstep fleet tick — masked hetero
@@ -566,6 +664,9 @@ def run(quick: bool = False) -> dict:
     # is deterministic (seeded workloads, no timing in the metrics), so
     # quick mode only shortens the horizon.
     traffic = bench_traffic(quick=quick)
+    # Acceptance S=65536 always (parity is the point; the timing side is
+    # cheap — one fused call per backend per tick).
+    kernel = bench_kernel_select(s=65536, ticks=6 if quick else 12)
     by_s = {r["n_streams"]: r for r in rows}
     out = {
         "bench": "controller_scoring",
@@ -575,6 +676,7 @@ def run(quick: bool = False) -> dict:
         "churn": churn,
         "sharded": sharded,
         "traffic": traffic,
+        "kernel_select": kernel,
         "speedup_at_1024": by_s[1024]["speedup"],
     }
     out["checks"] = {
@@ -598,6 +700,10 @@ def run(quick: bool = False) -> dict:
         "traffic_overload_goodput_holds":
             traffic["overload_goodput_vs_static"] >= 0.8,
         "traffic_no_retrace": traffic["no_retrace"],
+        # Parity and compile stability are asserted; speed is recorded
+        # only (interpret mode on CPU — see bench_kernel_select).
+        "kernel_picks_identical": kernel["picks_identical"],
+        "kernel_no_retrace": kernel["no_retrace"],
     }
     with open(_OUT, "w") as f:
         json.dump(out, f, indent=2)
@@ -629,11 +735,40 @@ def _print_traffic(t: dict) -> None:
           f"admission; no retrace: {t['no_retrace']}")
 
 
+def _print_kernel(kr: dict) -> None:
+    """Render one bench_kernel_select record."""
+    mode = "interpret" if kr["interpret"] else "compiled"
+    print(f"  kernel_select S={kr['n_streams']} "
+          f"(K={kr['k']}, L={kr['l']}, block_s={kr['block_s']}, "
+          f"{mode} on {kr['platform']}): pallas "
+          f"{kr['pallas_us_per_decision']:.3f} us/dec "
+          f"({kr['pallas_decisions_per_sec']:,.0f}/s) vs xla "
+          f"{kr['xla_us_per_decision']:.3f} us/dec "
+          f"(ratio {kr['pallas_vs_xla']:.2f}x, picks identical "
+          f"{kr['picks_identical']}, compiles {kr['n_compiles']}, "
+          f"intensity "
+          f"{kr['roofline']['arithmetic_intensity_flops_per_byte']:.0f} "
+          f"FLOP/B)")
+
+
 def main() -> list[tuple]:
     if "--sharded-child" in sys.argv:
         i = sys.argv.index("--sharded-child")
         s, ticks, reps = (int(a) for a in sys.argv[i + 1:i + 4])
         print(json.dumps(_sharded_child(s, ticks, reps)))
+        return []
+    if "--kernel-smoke" in sys.argv:
+        # CI smoke: the fused Pallas decision kernel in interpret mode at
+        # a reduced S — asserts bitwise pick parity with the XLA engine
+        # and a flat compile count under churn, without touching
+        # BENCH_controller.json.
+        kr = bench_kernel_select(s=4096, ticks=4, block_s=1024)
+        _print_kernel(kr)
+        assert kr["picks_identical"], \
+            "kernel smoke: pallas picks diverged from XLA"
+        assert kr["no_retrace"], \
+            "kernel smoke: pallas backend re-traced under churn"
+        print("kernel smoke: ALL PASS")
         return []
     if "--traffic-smoke" in sys.argv:
         # CI smoke: a small-S short-horizon sweep through the full
@@ -678,6 +813,7 @@ def main() -> list[tuple]:
           f"{sh['speedup_floor']:.2f}x, picks identical "
           f"{sh['picks_identical']})")
     _print_traffic(out["traffic"])
+    _print_kernel(out["kernel_select"])
     failed = [k for k, v in out["checks"].items() if not v]
     print("claim checks:", "ALL PASS" if not failed else f"FAIL: {failed}")
     print(f"  wrote {_OUT} ({time.time() - t0:.0f}s)")

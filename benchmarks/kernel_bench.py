@@ -6,17 +6,25 @@ full-level execution pay ~2/3 of dense (pow2 stripes) instead of the up-to
 Measured here (CPU host): per-level wall time of the jitted block-
 triangular path vs the masked-dense path, plus the analytic kernel FLOPs
 staircase (what the Pallas grid executes on TPU).  Also microbenches the
-other kernels' jitted ref paths (TPU wall-times are out of scope for this
-container — see DESIGN.md §9 on how perf is tracked here).
+other kernels' jitted ref paths and the fused `alert_select` decision
+kernel (interpret mode, bitwise pick parity asserted — docs/KERNELS.md;
+TPU wall-times are out of scope for this container — see DESIGN.md §9 on
+how perf is tracked here).
 """
 
 from __future__ import annotations
 
+import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:  # allow `python benchmarks/kernel_bench.py`
+    sys.path.insert(0, _ROOT)
 
 from repro.core.nesting import (StripeSpec, nested_linear_blocks,
                                 nested_linear_masked)
@@ -84,6 +92,18 @@ def run() -> dict:
     out["rwkv_ref_us"] = _timeit(
         jax.jit(lambda r, k, v, w, u, s0: ref.rwkv_scan_ref(
             r, k, v, w, u, s0)), q, k_, v, w6, u, s0) * 1e6
+
+    # fused Pallas decision kernel (interpret mode off-TPU): one
+    # churning pick-only hetero tick at S=4096, bitwise parity + flat
+    # compile count asserted inside; analytic roofline recorded
+    # (docs/KERNELS.md).
+    from benchmarks.controller_bench import bench_kernel_select
+    out["alert_select"] = bench_kernel_select(s=4096, ticks=4,
+                                              block_s=1024)
+    out["checks"]["alert_select_picks_identical"] = \
+        out["alert_select"]["picks_identical"]
+    out["checks"]["alert_select_no_retrace"] = \
+        out["alert_select"]["no_retrace"]
     return out
 
 
@@ -96,6 +116,12 @@ def main() -> list[tuple]:
           " ".join(f"{f:.3f}" for f in fr))
     print(f"  wall us/level: {' '.join(f'{t:.0f}' for t in tl)}  "
           f"(masked dense: {out['time_masked_dense_us']:.0f})")
+    ks = out["alert_select"]
+    print(f"  alert_select S={ks['n_streams']}: "
+          f"{ks['pallas_us_per_decision']:.3f} us/dec "
+          f"({'interpret' if ks['interpret'] else 'compiled'}), "
+          f"{ks['pallas_vs_xla']:.2f}x vs XLA, picks identical "
+          f"{ks['picks_identical']}")
     failed = [k for k, v in out["checks"].items() if not v]
     print("claim checks:", "ALL PASS" if not failed else f"FAIL: {failed}")
     rows = [
@@ -104,6 +130,9 @@ def main() -> list[tuple]:
         ("kernel_flash_ref", out["flash_ref_us"], "b2s256h4d64"),
         ("kernel_decode_ref", out["decode_ref_us"], "b2s256h4d64"),
         ("kernel_rwkv_ref", out["rwkv_ref_us"], "b2s256h4d64"),
+        ("kernel_alert_select", ks["pallas_us_per_decision"],
+         f"s4096;vs_xla={ks['pallas_vs_xla']:.2f}x;"
+         f"parity={ks['picks_identical']}"),
     ]
     return rows
 

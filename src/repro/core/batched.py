@@ -171,12 +171,24 @@ class BatchedAlertEngine:
     pad with dead lanes — DESIGN.md §6).  Decisions are bitwise identical
     to the unsharded engine: the grid has no cross-lane op, so
     partitioning cannot reassociate any reduction.
+
+    ``backend`` selects the select-path implementation: ``"xla"`` (the
+    fused jnp passes below) or ``"pallas"`` — the lane-tiled
+    :func:`repro.kernels.alert_select.alert_select` kernel, which fuses
+    estimation, the merged hetero score, and the argmin into one tiled
+    pass over ``[S, K, L]`` with bitwise-identical picks and predictions
+    (interpret mode off-TPU; docs/KERNELS.md).  Both backends share the
+    same seams, runtime-array contracts, and jit-cache behaviour;
+    :meth:`estimate` (the grid-returning debug API) always runs XLA.
+    ``pallas_block_s`` overrides the kernel's lane-tile size (benchmarks
+    raise it where VMEM is not the constraint).
     """
 
     def __init__(self, table: ProfileTable, goal=None, *,
                  overhead: float = 0.0,
                  paper_faithful_energy: bool = True,
-                 mesh=None):
+                 mesh=None, backend: str = "xla",
+                 pallas_block_s: int | None = None):
         from repro.core.controller import Goal  # avoid import cycle
 
         self.table = table
@@ -184,6 +196,11 @@ class BatchedAlertEngine:
         self.overhead = float(overhead)
         self.paper_faithful_energy = bool(paper_faithful_energy)
         self._minimize_energy = goal is Goal.MINIMIZE_ENERGY
+        self.backend = str(backend)
+        if self.backend not in ("xla", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}: "
+                             f"expected 'xla' or 'pallas'")
+        self.pallas_block_s = pallas_block_s
 
         k, l = table.latency.shape
         self._k, self._l = k, l
@@ -206,16 +223,89 @@ class BatchedAlertEngine:
             jit_kw = {"in_shardings": self._lane,
                       "out_shardings": self._lane}
 
+        # The four select executables hang off one seam: a dict keyed by
+        # (heterogeneous, predictions).  The XLA backend jits the fused
+        # jnp implementations below; the Pallas backend swaps in the
+        # lane-tiled `alert_select` kernel behind the SAME seams (same
+        # runtime-array signatures, so churn/goal flips never re-trace
+        # on either backend, and mesh sharding composes identically).
+        if self.backend == "pallas":
+            impls = self._pallas_select_impls()
+        else:
+            impls = {
+                (False, True): self._select_impl,
+                (False, False): functools.partial(
+                    self._select_impl, predictions=False),
+                (True, True): self._select_hetero_impl,
+                (True, False): functools.partial(
+                    self._select_hetero_impl, predictions=False),
+            }
         self._estimate_jit = jax.jit(self._estimate_impl, **jit_kw)
-        self._select_jit = jax.jit(self._select_impl, **jit_kw)
-        self._select_pick_jit = jax.jit(
-            functools.partial(self._select_impl, predictions=False),
-            **jit_kw)
-        self._select_hetero_jit = jax.jit(self._select_hetero_impl,
-                                          **jit_kw)
-        self._select_hetero_pick_jit = jax.jit(
-            functools.partial(self._select_hetero_impl, predictions=False),
-            **jit_kw)
+        self._select_jit = jax.jit(impls[(False, True)], **jit_kw)
+        self._select_pick_jit = jax.jit(impls[(False, False)], **jit_kw)
+        self._select_hetero_jit = jax.jit(impls[(True, True)], **jit_kw)
+        self._select_hetero_pick_jit = jax.jit(impls[(True, False)],
+                                               **jit_kw)
+
+    def _pallas_select_impls(self) -> dict:
+        """Build the four select implementations on the fused Pallas
+        kernel (:func:`repro.kernels.alert_select.alert_select`).
+
+        The kernel's contract matches ``_select_hetero_impl`` — one
+        tiled pass fusing estimation, the merged hetero score, and the
+        argmin, bitwise-identical picks/predictions — so the hetero
+        seams are direct pass-throughs and the homogeneous seams build
+        their all-active single-goal code vectors inside the trace.
+        Under a lane mesh each implementation is wrapped in ``shard_map``
+        (one kernel launch per device on its ``[S/n]`` lane shard; the
+        decision grid has no cross-lane op, so this is exact —
+        DESIGN.md §6)."""
+        from repro.kernels.alert_select import alert_select
+
+        base = functools.partial(
+            alert_select, latency=self._c_latency,
+            run_power=self._c_run_power, weights=self._c_weights,
+            q_fail=self._c_q_fail, overhead=self.overhead,
+            paper_faithful_energy=self.paper_faithful_energy)
+        if self.pallas_block_s is not None:
+            base = functools.partial(base,
+                                     block_s=int(self.pallas_block_s))
+        min_energy = self._minimize_energy
+        code = GOAL_MIN_ENERGY if min_energy else GOAL_MAX_ACCURACY
+
+        def _homog(predictions):
+            def _fn(mu, sd, phi, deadline, goal_val):
+                s = mu.shape[0]
+                gk = jnp.full((s,), code, jnp.int32)
+                act = jnp.ones((s,), jnp.int32)
+                zero = jnp.zeros((s,), jnp.float64)
+                ag = goal_val if min_energy else zero
+                eg = zero if min_energy else goal_val
+                return base(mu, sd, phi, deadline, ag, eg, gk, act,
+                            predictions=predictions)
+            return _fn
+
+        def _hetero(predictions):
+            def _fn(mu, sd, phi, deadline, ag, eg, gk, act):
+                return base(mu, sd, phi, deadline, ag, eg, gk, act,
+                            predictions=predictions)
+            return _fn
+
+        impls = {(False, True): _homog(True),
+                 (False, False): _homog(False),
+                 (True, True): _hetero(True),
+                 (True, False): _hetero(False)}
+        if self.mesh is not None:
+            from jax.experimental.shard_map import shard_map
+
+            from repro.launch.mesh import lane_pspec
+            p = lane_pspec(self.mesh)
+            impls = {(het, pred): shard_map(
+                         fn, mesh=self.mesh,
+                         in_specs=(p,) * (8 if het else 5),
+                         out_specs=(p,) * 7, check_rep=False)
+                     for (het, pred), fn in impls.items()}
+        return impls
 
     @staticmethod
     def _staircase_weight_matrix(table: ProfileTable) -> np.ndarray:

@@ -1,0 +1,259 @@
+"""Fused Pallas decision kernel for the ALERT selection hot path.
+
+One ``pl.pallas_call`` evaluates the whole per-tick decision — the
+Eq. 7/10 staircase accuracy expectation (erf probe grid contracted with
+the precomputed ``[K, K]`` staircase weight matrix), Eq. 9 energy, the
+Eq. 4/5 feasibility masks with the Section 3.3 relaxation fallback, the
+merged heterogeneous score grid, and the ``[K·L]`` argmin — in a single
+tiled pass over the ``[S, K, L]`` grid.  The XLA engine
+(:class:`repro.core.batched.BatchedAlertEngine`) materialises the full
+``[S, K, L]`` probe/accuracy/energy grids in HBM between fused stages;
+here every intermediate lives only for one lane tile.
+
+**Tiling.**  The grid is 1-D over lane blocks: ``grid = (S / bs,)`` with
+``bs`` lanes per program (``block_s``, default 256).  Per program the
+``[bs]`` state vectors stream in, the ``[K, L]`` latency/power tables and
+the ``[K, K]`` staircase weight matrix stay resident in VMEM (they are
+small replicated constants), and the ``[bs, K, L]`` probe math runs in
+registers/VMEM — nothing ``[S, K, L]``-shaped ever exists.  Lanes are
+independent, so the lane-block dimension is ``parallel``.
+
+**Numerics and parity.**  Probe math is float64, matching
+``core/batched.py`` op for op: the same sanitise → ``t_eff`` → erf →
+einsum → score → ``_row_argmin`` chain, with the block-sized staircase
+contraction ``einsum("ku,bul->bkl")`` bitwise-equal to the engine's
+full-fleet ``einsum("ku,sul->skl")`` (verified: elementwise ops are
+order-free and XLA keeps the contraction order; ``jnp.dot`` would NOT
+match).  Picks, feasibility, relax codes, and the per-pick prediction
+gathers are therefore bitwise identical to the XLA path — asserted by
+``tests/test_kernels.py``, the hypothesis suite, and the golden traces.
+
+**Interpret-mode contract.**  On non-TPU backends the kernel runs under
+the Pallas interpreter (``interpret=True`` — the grid/BlockSpec semantics
+execute as compiled XLA ops, so CPU CI exercises the exact kernel body).
+On TPU the same call compiles via Mosaic; float64 support there is
+hardware/toolchain-gated, so the TPU path is for real deployments to
+validate, while parity and CI run interpret mode.  See docs/KERNELS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.batched import (GOAL_MIN_ENERGY, RELAXED_ACCURACY,
+                                RELAXED_NONE, RELAXED_POWER)
+
+_SQRT2 = math.sqrt(2.0)
+_INV_SQRT_2PI = 1.0 / math.sqrt(2.0 * math.pi)
+
+# Lane-tile defaults: 256 amortises interpret-mode grid-step overhead on
+# CPU while keeping the [bs, K, L] f64 tile ~1 MB for typical tables;
+# benchmarks raise block_s to 8192 where VMEM is not the constraint.
+DEFAULT_BLOCK_S = 256
+_MIN_BLOCK_S = 8
+
+
+def _default_interpret() -> bool:
+    """Interpret everywhere but TPU (the CPU-CI fallback contract)."""
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _block_argmin(x):
+    """First-occurrence argmin along the last axis — the kernel twin of
+    ``core.batched._row_argmin`` (identical integer arithmetic, TPU-safe
+    2-D iota), so tie-breaks match the XLA engine bit for bit."""
+    c = x.shape[-1]
+    mask = x == jnp.min(x, axis=-1, keepdims=True)
+    rev = c - jax.lax.broadcasted_iota(jnp.int32, (1, c), 1)
+    return c - jnp.max(mask * rev, axis=-1)
+
+
+def _select_kernel(mu_ref, sd_ref, phi_ref, t_ref, ag_ref, eg_ref, gk_ref,
+                   act_ref, lat_ref, pw_ref, w_ref,
+                   i_ref, j_ref, lat_o_ref, acc_o_ref, en_o_ref, feas_ref,
+                   rel_ref, *, q_fail, overhead, paper_faithful,
+                   predictions):
+    """One lane tile: fused estimate + hetero score + argmin + gathers.
+
+    Mirrors ``BatchedAlertEngine._select_hetero_impl`` exactly (same op
+    order — that is the bitwise-parity contract); the homogeneous paths
+    are the all-active single-goal special case.
+    """
+    # --- dead-lane sanitisation (DESIGN.md §5: garbage-immune) -------- #
+    act = act_ref[...] != 0
+    mu = jnp.where(act, mu_ref[...], 1.0)
+    sd = jnp.where(act, sd_ref[...], 0.1)
+    phi = jnp.where(act, phi_ref[...], 0.25)
+    t = jnp.where(act, t_ref[...], 1.0)
+    ag = jnp.where(act, ag_ref[...], 0.0)
+    eg = jnp.where(act, eg_ref[...], 0.0)
+    t_eff = jnp.maximum(t - overhead, 1e-9)
+
+    # --- estimation: Eq. 7 + Eq. 10 via the [K, K] contraction -------- #
+    lat = lat_ref[...]                                # [K, L] (VMEM)
+    t_ = t_eff[:, None, None]                         # [bs, 1, 1]
+    lat_mean = mu[:, None, None] * lat[None]          # [bs, K, L]
+    lat_std = jnp.maximum(sd[:, None, None] * lat[None], 1e-12)
+    z = (t_ - lat_mean) / lat_std
+    f = 0.5 * (1.0 + jax.scipy.special.erf(z / _SQRT2))
+    # Block-sized staircase contraction == the engine's full-fleet einsum
+    # bitwise (same contraction order; jnp.dot would differ in the ulp).
+    acc = q_fail + jnp.einsum("ku,bul->bkl", w_ref[...], f)
+
+    # --- Eq. 9 energy on the same tile -------------------------------- #
+    caps = pw_ref[...][None]                          # [1, K, L]
+    if paper_faithful:
+        t_run = jnp.minimum(lat_mean, t_)
+    else:
+        pdf = jnp.exp(-0.5 * z ** 2) * _INV_SQRT_2PI
+        t_run = lat_mean * f + t_ * (1.0 - f) - lat_std * pdf
+        t_run = jnp.clip(t_run, 0.0, t_)
+    phi_ = phi[:, None, None]
+    energy = caps * t_run + phi_ * caps * jnp.maximum(t_ - t_run, 0.0)
+
+    # --- merged hetero score + relaxation + ONE argmin ---------------- #
+    bs = mu.shape[0]
+    k, l = lat.shape
+    kl = k * l
+    acc_f = acc.reshape(bs, kl)
+    en_f = energy.reshape(bs, kl)
+    is_min = gk_ref[...] == GOAL_MIN_ENERGY
+    is_min_ = is_min[:, None]
+    feas = jnp.where(is_min_, acc_f >= ag[:, None], en_f <= eg[:, None])
+    any_f = feas.any(axis=1)
+    any_ = any_f[:, None]
+    acc_use = jnp.where(feas | ~any_, acc_f, -jnp.inf)
+    best = acc_use.max(axis=1, keepdims=True)
+    sc_a = jnp.where(best - acc_use <= 1e-12, en_f, jnp.inf)
+    sc_e = jnp.where(any_, jnp.where(feas, en_f, jnp.inf), -acc_f)
+    pick = _block_argmin(jnp.where(is_min_, sc_e, sc_a))
+    relaxed = jnp.where(any_f, RELAXED_NONE,
+                        jnp.where(is_min, RELAXED_ACCURACY, RELAXED_POWER))
+    pick = jnp.where(act, pick, 0)
+    any_f = any_f & act
+    relaxed = jnp.where(act, relaxed, RELAXED_NONE)
+
+    i_ref[...] = (pick // l).astype(jnp.int32)
+    j_ref[...] = (pick % l).astype(jnp.int32)
+    feas_ref[...] = any_f.astype(jnp.int32)
+    rel_ref[...] = relaxed.astype(jnp.int32)
+    if predictions:
+        onehot = jax.lax.broadcasted_iota(jnp.int32, (1, kl), 1) \
+            == pick[:, None]
+        gather = lambda a: jnp.sum(a.reshape(bs, kl) * onehot, axis=1)
+        zero = lambda x: jnp.where(act, x, 0.0)
+        lat_o_ref[...] = zero(gather(lat_mean))
+        acc_o_ref[...] = zero(gather(acc))
+        en_o_ref[...] = zero(gather(energy))
+    else:
+        z0 = jnp.zeros_like(mu)
+        lat_o_ref[...] = z0
+        acc_o_ref[...] = z0
+        en_o_ref[...] = z0
+
+
+def alert_select(mu, sigma, phi, deadline, accuracy_goal, energy_goal,
+                 goal_kind, active, *, latency, run_power, weights,
+                 q_fail, overhead=0.0, paper_faithful_energy=True,
+                 predictions=True, block_s=DEFAULT_BLOCK_S,
+                 interpret=None):
+    """Fused ``[S]``-vector decision pass: state in, picks out.
+
+    ``mu``/``sigma``/``phi``/``deadline``/``accuracy_goal``/``energy_goal``
+    are ``[S]`` float vectors, ``goal_kind`` ``[S]`` int codes
+    (``GOAL_MIN_ENERGY``/``GOAL_MAX_ACCURACY``) and ``active`` an ``[S]``
+    lane mask — the exact runtime-array contract of
+    ``BatchedAlertEngine._select_hetero_impl``, so churn/goal flips never
+    re-trace.  ``latency``/``run_power`` are the ``[K, L]`` profile
+    tables, ``weights`` the ``[K, K]`` staircase weight matrix, and
+    ``q_fail``/``overhead``/``paper_faithful_energy`` the scalar engine
+    constants (baked into the trace).
+
+    S is padded up to a ``block_s`` multiple with dead lanes inside the
+    trace (sanitised in-kernel, sliced off on return), so any fleet size
+    works and per-lane results are unaffected.  Returns the 7-tuple
+    ``(model_index, power_index, predicted_latency, predicted_accuracy,
+    predicted_energy, feasible, relaxed_code)`` with every element
+    bitwise-identical to the XLA engine; with ``predictions=False`` the
+    three prediction gathers are skipped (fields come back zero).
+
+    ``interpret=None`` resolves to the CPU-CI fallback (interpret mode
+    everywhere but TPU); pass ``False`` to force Mosaic compilation.
+    """
+    from repro.kernels._pallas_compat import CompilerParams
+
+    if interpret is None:
+        interpret = _default_interpret()
+    k, l = latency.shape
+    fvecs = [jnp.asarray(a, jnp.float64)
+             for a in (mu, sigma, phi, deadline, accuracy_goal,
+                       energy_goal)]
+    gk = jnp.asarray(goal_kind, jnp.int32)
+    act = jnp.asarray(active, jnp.int32)
+    s = fvecs[0].shape[0]
+    bs = min(int(block_s), _round_up(s, _MIN_BLOCK_S))
+    s_pad = _round_up(s, bs)
+    pad = s_pad - s
+    if pad:
+        fvecs = [jnp.pad(a, (0, pad)) for a in fvecs]
+        gk = jnp.pad(gk, (0, pad))
+        act = jnp.pad(act, (0, pad))           # pads are dead lanes
+    lane = pl.BlockSpec((bs,), lambda i: (i,))
+    const = lambda kk, ll: pl.BlockSpec((kk, ll), lambda i: (0, 0))
+    kern = functools.partial(
+        _select_kernel, q_fail=float(q_fail), overhead=float(overhead),
+        paper_faithful=bool(paper_faithful_energy),
+        predictions=bool(predictions))
+    f64 = jnp.dtype(jnp.float64)
+    i32 = jnp.dtype(jnp.int32)
+    out = pl.pallas_call(
+        kern,
+        grid=(s_pad // bs,),
+        in_specs=[lane] * 8 + [const(k, l), const(k, l), const(k, k)],
+        out_specs=[lane] * 7,
+        out_shape=[jax.ShapeDtypeStruct((s_pad,), d)
+                   for d in (i32, i32, f64, f64, f64, i32, i32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(*fvecs, gk, act, jnp.asarray(latency, jnp.float64),
+      jnp.asarray(run_power, jnp.float64),
+      jnp.asarray(weights, jnp.float64))
+    i, j, lat_p, acc_p, en_p, feas, rel = (o[:s] for o in out)
+    return i, j, lat_p, acc_p, en_p, feas.astype(bool), rel
+
+
+def alert_select_cost(s: int, k: int, l: int, *,
+                      predictions: bool = False) -> dict:
+    """Analytic roofline terms for one fused pass (docs/KERNELS.md).
+
+    FLOP count walks the kernel body: ~12 elementwise ops per
+    ``[S, K, L]`` probe cell (latency/z/energy chains), the ``2·S·K²·L``
+    staircase contraction, ~8 ops per cell for the merged score +
+    reductions, and one erf per cell (counted as a transcendental, not a
+    FLOP).  Bytes are the streamed ``[S]`` vectors (8 f64 in, 3 f64 + 4
+    i32 out) — the ``[K, L]``/``[K, K]`` constants stay VMEM-resident, so
+    per-lane HBM traffic is O(1) while per-lane compute is O(K·L):
+    arithmetic intensity ~``K·L/4`` FLOP/byte, firmly compute-(VPU-)bound
+    for production tables.
+    """
+    cells = s * k * l
+    flops = cells * (12 + 8) + 2 * s * k * k * l
+    if predictions:
+        flops += 3 * s * k * l * 2          # one-hot gather mul+add
+    bytes_io = s * (8 * 8 + 3 * 8 + 4 * 4)
+    return {
+        "flops": float(flops),
+        "bytes_accessed": float(bytes_io),
+        "transcendentals": float(cells),
+        "arithmetic_intensity_flops_per_byte": flops / bytes_io,
+    }

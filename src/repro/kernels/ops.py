@@ -30,6 +30,9 @@ def _use_interpret() -> bool:
 def nested_matmul(x: jax.Array, w: jax.Array, in_spec: StripeSpec,
                   out_spec: StripeSpec, level: int | None = None,
                   backend: str | None = None, **kw) -> jax.Array:
+    """Block-lower-triangular nested matmul at ``level`` (paper §4.2.1);
+    ``backend="ref"`` uses the pure-jnp oracle, otherwise the Pallas
+    kernel (interpret off-TPU)."""
     if backend == "ref":
         return ref.nested_matmul_ref(x, w, in_spec, out_spec, level)
     return _nm.nested_matmul(x, w, in_spec, out_spec, level,
@@ -38,6 +41,9 @@ def nested_matmul(x: jax.Array, w: jax.Array, in_spec: StripeSpec,
 
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
                     backend: str | None = None, **kw):
+    """Streaming-softmax prefill attention (GQA/MQA, causal/window/
+    softcap); ``backend="ref"`` uses the pure-jnp oracle, otherwise the
+    Pallas kernel (interpret off-TPU)."""
     if backend == "ref":
         return ref.flash_attention_ref(q, k, v, causal=causal,
                                        window=window, softcap=softcap)
@@ -48,6 +54,9 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
 
 def decode_attention(q, k, v, cache_len, *, window=None,
                      backend: str | None = None, **kw):
+    """Single-position decode attention over a ragged KV cache;
+    ``backend="ref"`` uses the pure-jnp oracle, otherwise the Pallas
+    kernel (interpret off-TPU)."""
     if backend == "ref":
         return ref.decode_attention_ref(q, k, v, cache_len, window=window)
     return _dec.decode_attention(q, k, v, cache_len, window=window,
@@ -56,6 +65,8 @@ def decode_attention(q, k, v, cache_len, *, window=None,
 
 def rwkv_scan(r, k, v, w, u, s0, *, chunk: int = 128,
               backend: str | None = None, **kw):
+    """Chunked RWKV6 state scan; ``backend="ref"`` uses the pure-jnp
+    oracle, otherwise the Pallas kernel (interpret off-TPU)."""
     if backend == "ref":
         return ref.rwkv_scan_ref(r, k, v, w, u, s0)
     return _rw.rwkv_scan(r, k, v, w, u, s0, chunk=chunk,

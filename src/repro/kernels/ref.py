@@ -91,7 +91,7 @@ def rwkv_scan_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
     """
     rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
 
-    def step(state, xs):
+    def _step(state, xs):
         rt, kt, vt, wt = xs
         kv = kt[..., :, None] * vt[..., None, :]
         y = jnp.einsum("bhi,bhij->bhj", rt,
@@ -100,5 +100,5 @@ def rwkv_scan_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
         return state, y
 
     xs = tuple(t.swapaxes(0, 1) for t in (rf, kf, vf, wf))
-    sN, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    sN, ys = jax.lax.scan(_step, s0.astype(jnp.float32), xs)
     return ys.swapaxes(0, 1).astype(r.dtype), sN

@@ -36,7 +36,7 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sn_ref,
 
     u = u_ref[0, 0].astype(jnp.float32)            # [1, hd] -> [hd]
 
-    def step(t, _):
+    def _step(t, _):
         rt = r_ref[0, t, 0, :].astype(jnp.float32)
         kt = k_ref[0, t, 0, :].astype(jnp.float32)
         vt = v_ref[0, t, 0, :].astype(jnp.float32)
@@ -48,7 +48,7 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sn_ref,
         state_ref[...] = wt[:, None] * s + kv
         return 0
 
-    jax.lax.fori_loop(0, chunk, step, 0)
+    jax.lax.fori_loop(0, chunk, _step, 0)
 
     @pl.when(ci == last)
     def _emit():

@@ -61,6 +61,20 @@ def lane_shardings(mesh):
             NamedSharding(mesh, P()))
 
 
+def lane_pspec(mesh):
+    """``PartitionSpec`` over a 1-D lane mesh's single axis — the
+    ``shard_map`` twin of :func:`lane_shardings`, used by the Pallas
+    select backend to launch one `alert_select` kernel per device on its
+    lane shard (the decision grid has no cross-lane op, so per-device
+    kernels are exact — DESIGN.md §6)."""
+    from jax.sharding import PartitionSpec
+
+    if len(mesh.axis_names) != 1:
+        raise ValueError("lane sharding needs a 1-D mesh "
+                         f"(got axes {mesh.axis_names})")
+    return PartitionSpec(mesh.axis_names[0])
+
+
 def batch_axes(mesh) -> tuple[str, ...]:
     """Axes the global batch shards over."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

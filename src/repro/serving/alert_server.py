@@ -175,6 +175,10 @@ class FleetAlertServer:
     lanes start dead and are leased by later admissions), filter/goal
     state stays lane-sharded on device between ticks, and churn remains
     re-trace-free (DESIGN.md §6).
+
+    ``backend="pallas"`` scores ticks through the fused ``alert_select``
+    kernel instead of the XLA passes — bitwise-identical picks, same
+    churn/no-retrace contract (docs/KERNELS.md).
     """
 
     def __init__(self, engine: ServeEngine, params,
@@ -186,7 +190,7 @@ class FleetAlertServer:
                  prompt_len: int = 8, gen_tokens: int = 4,
                  accuracy_window: int = 10,
                  start_active: bool = True,
-                 mesh=None):
+                 mesh=None, backend: str = "xla"):
         self.engine = engine
         self.params = params
         self.goal = goal
@@ -202,7 +206,8 @@ class FleetAlertServer:
         # lanes start dead and are recycled by admissions like any other.
         pad = 0 if mesh is None else (-n_streams) % mesh.size
         cap = n_streams + pad
-        self.scoring = BatchedAlertEngine(self.table, goal, mesh=mesh)
+        self.scoring = BatchedAlertEngine(self.table, goal, mesh=mesh,
+                                          backend=backend)
         self.slowdown = SlowdownFilterBank(cap, mesh=mesh)
         self.idle_power = IdlePowerFilterBank(cap, mesh=mesh)
         self.accuracy_window = accuracy_window

@@ -609,14 +609,15 @@ class FleetSim:
                   anytime: bool = True, power_control: bool = True,
                   dnn_control: bool = True, overhead: float = 0.0,
                   paper_faithful_energy: bool = True,
-                  mesh=None, scheme_name: str = "alert") -> FleetResult:
+                  mesh=None, backend: str = "xla",
+                  scheme_name: str = "alert") -> FleetResult:
         """Fleet-wide uniform goal/constraints (the Table-3 schemes)."""
         return self.run_streams(
             [goal] * self.n_streams, [cons] * self.n_streams,
             anytime=anytime, power_control=power_control,
             dnn_control=dnn_control, overhead=overhead,
             paper_faithful_energy=paper_faithful_energy,
-            mesh=mesh, scheme_name=scheme_name)
+            mesh=mesh, backend=backend, scheme_name=scheme_name)
 
     def run_specs(self, specs: Sequence[StreamSpec],
                   **kwargs) -> FleetResult:
@@ -632,7 +633,8 @@ class FleetSim:
                     anytime: bool = True, power_control: bool = True,
                     dnn_control: bool = True, overhead: float = 0.0,
                     paper_faithful_energy: bool = True,
-                    mesh=None, scheme_name: str = "alert") -> FleetResult:
+                    mesh=None, backend: str = "xla",
+                    scheme_name: str = "alert") -> FleetResult:
         """Advance the whole (possibly ragged, heterogeneous) fleet; one
         masked engine call per global tick.
 
@@ -648,6 +650,12 @@ class FleetSim:
         permanently dead lanes (masked, never delivered, never observed),
         so any fleet size works and per-stream results are bit-identical
         to the unsharded run (DESIGN.md §6).
+
+        ``backend`` forwards to :class:`BatchedAlertEngine` —
+        ``"pallas"`` scores every tick through the fused
+        ``alert_select`` kernel with bitwise-identical picks, so whole
+        trajectories (including the golden traces) reproduce exactly
+        (docs/KERNELS.md).
         """
         table = self.table
         assert len(goals) == self.n_streams
@@ -669,7 +677,8 @@ class FleetSim:
         sub = table.subset(idx)
         engine = BatchedAlertEngine(
             sub, None, overhead=overhead,
-            paper_faithful_energy=paper_faithful_energy, mesh=mesh)
+            paper_faithful_energy=paper_faithful_energy, mesh=mesh,
+            backend=backend)
         self.engine = engine
         s_n, t_n = self.n_streams, self.n_ticks
         # Lane padding for the sharded engine: S must divide the mesh, so

@@ -166,6 +166,9 @@ class SessionGateway:
     ``policy="static"`` executes one fixed ``(model, power)`` config
     through the identical clock/queue/delivery path (the hindsight
     ``oracle_static`` baseline of ``repro.traffic.loadsweep``).
+    ``backend`` forwards to the engine (``"pallas"`` scores rounds with
+    the fused ``alert_select`` kernel — bitwise-identical picks, same
+    no-retrace paging contract; docs/KERNELS.md).
     """
 
     def __init__(self, table: ProfileTable, n_lanes: int, *,
@@ -173,7 +176,7 @@ class SessionGateway:
                  tick: float | None = None,
                  max_queue: int | None = None,
                  min_feasible_latency: float | None = None,
-                 accuracy_window: int = 10):
+                 accuracy_window: int = 10, backend: str = "xla"):
         self.table = table
         self.n_lanes = int(n_lanes)
         self.phi_true = float(phi_true)
@@ -182,7 +185,8 @@ class SessionGateway:
         self.min_feasible_latency = float(table.latency.min()) \
             if min_feasible_latency is None else float(min_feasible_latency)
         self.accuracy_window = int(accuracy_window)
-        self.engine = BatchedAlertEngine(table, None, overhead=overhead)
+        self.engine = BatchedAlertEngine(table, None, overhead=overhead,
+                                         backend=backend)
         self.slow = SlowdownFilterBank(self.n_lanes)
         self.idle = IdlePowerFilterBank(self.n_lanes)
         self.goal_bank = WindowedGoalBank(

@@ -506,3 +506,101 @@ class TestFleetSim:
             assert res.scheme == scheme
             assert np.all(res.energy > 0)
             assert res.accuracy.shape == (trace.n,)
+
+
+class TestPallasBackend:
+    """`backend="pallas"` behind the engine seams: bitwise pick parity,
+    churn/no-retrace, and golden-trace reproduction through FleetSim
+    (docs/KERNELS.md)."""
+
+    def _pair(self, table, goal=None, **kw):
+        return (BatchedAlertEngine(table, goal, **kw),
+                BatchedAlertEngine(table, goal, backend="pallas", **kw))
+
+    def test_unknown_backend_rejected(self):
+        with pytest.raises(ValueError, match="backend"):
+            BatchedAlertEngine(family_table("image"), None,
+                               backend="cuda")
+
+    @pytest.mark.parametrize("goal", [Goal.MINIMIZE_ENERGY,
+                                      Goal.MAXIMIZE_ACCURACY])
+    def test_homogeneous_bitwise_parity(self, goal):
+        rng = np.random.default_rng(21)
+        table = random_table(rng)
+        med_lat = float(np.median(table.latency))
+        med_en = float(np.median(table.run_power)) * med_lat
+        xla, pal = self._pair(table, goal, overhead=0.05 * med_lat)
+        s = 96
+        mus, sds, phis = random_state(rng, s)
+        dls = rng.uniform(0.2, 3.0, s) * med_lat
+        gv = rng.uniform(0.3, 1.05, s) if goal is Goal.MINIMIZE_ENERGY \
+            else rng.uniform(0.0, 2.5, s) * med_en
+        kw = {"accuracy_goal" if goal is Goal.MINIMIZE_ENERGY
+              else "energy_goal": gv}
+        for pred in (True, False):
+            bx = xla.select(mus, sds, phis, dls, predictions=pred, **kw)
+            bp = pal.select(mus, sds, phis, dls, predictions=pred, **kw)
+            for f in ("model_index", "power_index", "feasible",
+                      "relaxed_code", "predicted_latency",
+                      "predicted_accuracy", "predicted_energy"):
+                assert np.array_equal(getattr(bx, f), getattr(bp, f)), f
+
+    def test_churning_hetero_fleet_no_retrace(self):
+        """Goal flips, mask churn, and lane recycling re-use ONE compiled
+        kernel executable, with every pick bitwise-equal to XLA."""
+        table = family_table("image")
+        rng = np.random.default_rng(5)
+        xla, pal = self._pair(table, None)
+        s = 64
+        dls = deadline_range(table, 5)
+        gk = rng.integers(0, 2, s)
+        act = rng.random(s) < 0.9
+        med_en = float(np.median(table.run_power)
+                       * np.median(table.latency))
+        kw = dict(accuracy_goal=rng.uniform(0.5, 0.9, s),
+                  energy_goal=rng.uniform(0.5, 3.0, s) * med_en,
+                  predictions=False)
+        mus, sds, phis = random_state(rng, s)
+        pal.select(mus, sds, phis, rng.choice(dls, s), goal_kind=gk,
+                   active=act, **kw)
+        n0 = pal.n_compiles()
+        for _ in range(12):
+            flip = rng.integers(0, s, 4)
+            act[flip] = ~act[flip]
+            gk = np.where(rng.random(s) < 0.2, 1 - gk, gk)
+            mus, sds, phis = random_state(rng, s)
+            d = rng.choice(dls, s)
+            bx = xla.select(mus, sds, phis, d, goal_kind=gk, active=act,
+                            **kw)
+            bp = pal.select(mus, sds, phis, d, goal_kind=gk, active=act,
+                            **kw)
+            assert np.array_equal(bx.model_index, bp.model_index)
+            assert np.array_equal(bx.power_index, bp.power_index)
+            assert np.array_equal(bx.feasible, bp.feasible)
+            assert np.array_equal(bx.relaxed_code, bp.relaxed_code)
+        assert pal.n_compiles() == n0, "pallas backend re-traced"
+        assert pal.n_compiles()[1] == 1
+
+    def test_fleetsim_reproduces_golden_traces(self):
+        """FleetSim(backend="pallas") reproduces the checked-in golden
+        alert traces BIT for BIT — whole closed-loop trajectories, where
+        one flipped pick anywhere would cascade."""
+        import json
+        import os
+
+        from tests.make_golden_traces import GOLDEN_SEED, golden_config
+
+        path = os.path.join(os.path.dirname(__file__),
+                            "golden_traces.json")
+        with open(path) as f:
+            golden = json.load(f)
+        table, cons = golden_config()
+        for env_name in ("default", "cpu", "memory"):
+            trace = EnvironmentTrace(ENVS[env_name], seed=GOLDEN_SEED)
+            fleet = FleetSim(table, [trace])
+            res = fleet.run_alert(Goal.MAXIMIZE_ACCURACY, cons,
+                                  backend="pallas").stream(0)
+            want = golden["envs"][env_name]["alert"]
+            assert res.mean_energy == want["mean_energy"], env_name
+            assert res.mean_error == want["mean_error"], env_name
+            assert res.miss_rate == want["miss_rate"], env_name

@@ -1,0 +1,70 @@
+"""Executable documentation: every fenced ``python`` block in README.md
+and docs/*.md runs as a test, so quickstart snippets cannot rot.
+
+Rules of the harness:
+
+* only fences opened exactly with ```` ```python ```` are collected
+  (``bash``/plain fences are ignored);
+* a snippet containing the literal marker ``# doc-snippet: no-run``
+  anywhere opts out (for illustrative fragments that need hardware or
+  state the test process doesn't have);
+* snippets execute in-process with a fresh namespace, cwd at the repo
+  root (so ``from benchmarks.common import ...`` works exactly as the
+  docs claim with ``PYTHONPATH=src``), and must finish without raising —
+  their own ``assert`` lines are part of the documentation's promise.
+
+A meta-test pins that the harness actually finds snippets, so a
+markdown reshuffle can't silently turn this file into a no-op.
+"""
+
+import glob
+import os
+import re
+
+import pytest
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+_DOC_FILES = [os.path.join(_ROOT, "README.md")] + sorted(
+    glob.glob(os.path.join(_ROOT, "docs", "*.md")))
+_FENCE = re.compile(r"^```python[ \t]*\n(.*?)^```", re.S | re.M)
+NO_RUN = "# doc-snippet: no-run"
+
+
+def _collect():
+    """(relpath, first line number, source) for every python fence."""
+    out = []
+    for path in _DOC_FILES:
+        with open(path) as f:
+            text = f.read()
+        rel = os.path.relpath(path, _ROOT)
+        for m in _FENCE.finditer(text):
+            line = text[:m.start(1)].count("\n") + 1
+            out.append((rel, line, m.group(1)))
+    return out
+
+SNIPPETS = _collect()
+
+
+@pytest.mark.parametrize(
+    "rel,line,code", SNIPPETS,
+    ids=[f"{rel}:{line}" for rel, line, _ in SNIPPETS])
+def test_doc_snippet_executes(rel, line, code):
+    """The snippet runs green exactly as printed in the docs."""
+    if NO_RUN in code:
+        pytest.skip("snippet marked no-run")
+    cwd = os.getcwd()
+    os.chdir(_ROOT)
+    try:
+        exec(compile(code, f"{rel}:{line}", "exec"),
+             {"__name__": "__doc_snippet__"})
+    finally:
+        os.chdir(cwd)
+
+
+def test_harness_finds_snippets():
+    """README and docs/KERNELS.md each contribute at least one
+    executable snippet (guards against the extractor going vacuous)."""
+    files = {rel for rel, _, _ in SNIPPETS}
+    assert "README.md" in files
+    assert os.path.join("docs", "KERNELS.md") in files
+    assert len(SNIPPETS) >= 2

@@ -2,9 +2,11 @@
 
 Dependency-free mirror of the ruff D1xx selection CI runs
 (``ruff check --select D100,D101,D102,D103,D104,D106`` on
-``src/repro/core`` + ``src/repro/serving`` + ``src/repro/traffic``):
+``src/repro/core`` + ``src/repro/serving`` + ``src/repro/traffic`` +
+``src/repro/kernels``):
 every public module, class, method, and function in the decision path
-must carry a docstring, so the ISSUE-3 documentation pass cannot rot.
+and the kernel package must carry a docstring, so the ISSUE-3
+documentation pass cannot rot.
 Private names (leading underscore), magic methods (D105), and
 ``__init__`` (D107) are exempt, matching the CI selection.
 """
@@ -15,7 +17,7 @@ import os
 import pytest
 
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
-LINTED_PACKAGES = ("core", "serving", "traffic")
+LINTED_PACKAGES = ("core", "serving", "traffic", "kernels")
 
 
 def _iter_py_files():
@@ -72,4 +74,5 @@ def test_gate_covers_both_packages():
     a silent path typo making the gate vacuous)."""
     files = {os.path.basename(p) for p in _iter_py_files()}
     assert {"batched.py", "kalman.py", "sim.py", "alert_server.py",
-            "gateway.py", "workloads.py", "loadsweep.py"} <= files
+            "gateway.py", "workloads.py", "loadsweep.py",
+            "alert_select.py", "ops.py"} <= files

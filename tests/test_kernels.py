@@ -1,13 +1,18 @@
 """Per-kernel interpret-mode validation: sweep shapes/dtypes, allclose vs
-the pure-jnp oracle in ref.py."""
+the pure-jnp oracle in ref.py — plus the fused `alert_select` decision
+kernel, which is held to a stricter bar: BITWISE pick/prediction parity
+against the XLA engine (docs/KERNELS.md)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from jax.experimental import enable_x64
 
+from repro.core.batched import BatchedAlertEngine
 from repro.core.nesting import StripeSpec
 from repro.kernels import ref
+from repro.kernels.alert_select import alert_select, alert_select_cost
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.nested_matmul import nested_matmul, nested_matmul_flops
@@ -146,6 +151,127 @@ class TestDecodeAttention:
                                interpret=True)
         want = ref.decode_attention_ref(q, k, v, cl, window=64)
         np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def _hetero_state(rng, table, s, garbage=np.nan):
+    """Random heterogeneous fleet state with dead lanes full of garbage."""
+    med_lat = float(np.median(table.latency))
+    med_en = float(np.median(table.run_power)) * med_lat
+    state = dict(
+        mu=rng.uniform(0.5, 3.0, s), sigma=rng.uniform(0.01, 0.5, s),
+        phi=rng.uniform(0.05, 0.8, s),
+        deadline=rng.uniform(0.1, 3.0, s) * med_lat,
+        accuracy_goal=rng.uniform(0.2, 1.1, s),
+        energy_goal=rng.uniform(0.0, 2.5, s) * med_en,
+        goal_kind=rng.integers(0, 2, s),
+        active=rng.random(s) < 0.85)
+    for k in ("mu", "sigma", "phi", "deadline", "accuracy_goal",
+              "energy_goal"):
+        state[k][~state["active"]] = garbage
+    return state
+
+
+def _kernel_out(engine, state, **kw):
+    """Run the raw kernel with an engine's baked constants."""
+    with enable_x64():
+        out = alert_select(
+            state["mu"], state["sigma"], state["phi"], state["deadline"],
+            state["accuracy_goal"], state["energy_goal"],
+            state["goal_kind"], state["active"],
+            latency=engine._c_latency, run_power=engine._c_run_power,
+            weights=engine._c_weights, q_fail=engine._c_q_fail,
+            overhead=engine.overhead, **kw)
+    return [np.asarray(o) for o in out]
+
+
+def _assert_bitwise(batch, out):
+    i, j, lat, acc, en, feas, rel = out
+    assert np.array_equal(i, batch.model_index)
+    assert np.array_equal(j, batch.power_index)
+    assert np.array_equal(feas, batch.feasible)
+    assert np.array_equal(rel, batch.relaxed_code)
+    assert np.array_equal(lat, batch.predicted_latency)
+    assert np.array_equal(acc, batch.predicted_accuracy)
+    assert np.array_equal(en, batch.predicted_energy)
+
+
+class TestAlertSelect:
+    """Fused decision kernel vs the XLA engine: BITWISE equality of
+    picks, feasibility, relax codes, and prediction gathers."""
+
+    @pytest.mark.parametrize("s", [1, 5, 64, 257])
+    def test_bitwise_parity_hetero(self, s):
+        from benchmarks.controller_bench import random_table
+        rng = np.random.default_rng(100 + s)
+        table = random_table(rng)
+        engine = BatchedAlertEngine(
+            table, None, overhead=0.1 * float(np.median(table.latency)))
+        st = _hetero_state(rng, table, s)
+        batch = engine.select(st["mu"], st["sigma"], st["phi"],
+                              st["deadline"],
+                              accuracy_goal=st["accuracy_goal"],
+                              energy_goal=st["energy_goal"],
+                              goal_kind=st["goal_kind"],
+                              active=st["active"])
+        _assert_bitwise(batch, _kernel_out(engine, st, block_s=64))
+
+    @pytest.mark.parametrize("garbage", [np.nan, np.inf, -np.inf, 1e300])
+    def test_dead_lane_garbage_is_inert(self, garbage):
+        from benchmarks.controller_bench import random_table
+        rng = np.random.default_rng(7)
+        table = random_table(rng)
+        engine = BatchedAlertEngine(table, None)
+        st = _hetero_state(rng, table, 33, garbage=garbage)
+        i, j, lat, acc, en, feas, rel = _kernel_out(engine, st)
+        dead = ~st["active"]
+        assert np.all(i[dead] == 0) and np.all(j[dead] == 0)
+        assert not feas[dead].any() and np.all(rel[dead] == 0)
+        assert np.all(lat[dead] == 0.0) and np.all(en[dead] == 0.0)
+        live = st["active"]
+        batch = engine.select(st["mu"], st["sigma"], st["phi"],
+                              st["deadline"],
+                              accuracy_goal=st["accuracy_goal"],
+                              energy_goal=st["energy_goal"],
+                              goal_kind=st["goal_kind"],
+                              active=st["active"])
+        assert np.array_equal(i[live], batch.model_index[live])
+        assert np.array_equal(j[live], batch.power_index[live])
+
+    def test_block_size_invariance(self):
+        """Lane tiling must not change a single bit of any output."""
+        from benchmarks.controller_bench import random_table
+        rng = np.random.default_rng(11)
+        table = random_table(rng)
+        engine = BatchedAlertEngine(table, None)
+        st = _hetero_state(rng, table, 200)
+        outs = [_kernel_out(engine, st, block_s=bs)
+                for bs in (8, 64, 256, 1024)]
+        for o in outs[1:]:
+            for a, b in zip(o, outs[0]):
+                assert np.array_equal(a, b)
+
+    def test_pick_only_matches_full(self):
+        from benchmarks.controller_bench import random_table
+        rng = np.random.default_rng(13)
+        table = random_table(rng)
+        engine = BatchedAlertEngine(table, None)
+        st = _hetero_state(rng, table, 50)
+        full = _kernel_out(engine, st)
+        pick = _kernel_out(engine, st, predictions=False)
+        for a, b in zip(pick[:2] + pick[5:], full[:2] + full[5:]):
+            assert np.array_equal(a, b)
+        for z in pick[2:5]:
+            assert np.all(z == 0.0)
+
+    def test_cost_model_is_compute_bound(self):
+        """Roofline sanity: per-lane HBM traffic is O(1) while compute is
+        O(K·L), so intensity grows with the table and clears the VPU
+        ridge for production-sized tables."""
+        c = alert_select_cost(65536, 8, 8)
+        assert c["transcendentals"] == 65536 * 64
+        assert c["arithmetic_intensity_flops_per_byte"] > 10.0
+        assert alert_select_cost(65536, 8, 8, predictions=True)["flops"] \
+            > c["flops"]
 
 
 class TestRwkvScan:

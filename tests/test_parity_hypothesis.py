@@ -45,8 +45,14 @@ _KINDS = {GOAL_MIN_ENERGY: Goal.MINIMIZE_ENERGY,
 # plain checkers (hypothesis-independent)                            #
 # ------------------------------------------------------------------ #
 def check_select_parity(table_seed: int, lanes: list[dict],
-                        overhead_frac: float, garbage_idx: int) -> None:
-    """One heterogeneous masked select vs per-lane scalar references."""
+                        overhead_frac: float, garbage_idx: int,
+                        backend: str = "xla") -> None:
+    """One heterogeneous masked select vs per-lane scalar references.
+
+    ``backend="pallas"`` runs the same property through the fused
+    `alert_select` kernel: the reference is the shared oracle, so kernel
+    == reference here plus engine == reference above proves the
+    kernel/XLA bitwise pick parity on every drawn fleet."""
     rng = np.random.default_rng(table_seed)
     table = random_table(rng)
     med_lat = float(np.median(table.latency))
@@ -66,7 +72,8 @@ def check_select_parity(table_seed: int, lanes: list[dict],
     for arr in (mus, sds, phis, dls, qgs, egs):
         arr[~active] = garbage
 
-    engine = BatchedAlertEngine(table, None, overhead=overhead)
+    engine = BatchedAlertEngine(table, None, overhead=overhead,
+                                backend=backend)
     batch = engine.select(mus, sds, phis, dls, accuracy_goal=qgs,
                           energy_goal=egs, goal_kind=gk, active=active)
     est = engine.estimate(mus, sds, phis,
@@ -155,6 +162,22 @@ def test_select_parity_random_fleets(data):
     check_select_parity(table_seed, lanes, overhead_frac, garbage_idx)
 
 
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_select_parity_random_fleets_pallas(data):
+    """The fused Pallas kernel under the same property: random hetero
+    fleets, garbage-laden dead lanes, both relaxation branches — picks
+    bitwise-equal to the scalar reference (and hence to the XLA
+    engine)."""
+    table_seed = data.draw(st.integers(0, 2**31 - 1))
+    n = data.draw(st.integers(1, 8))
+    lanes = [_draw_lane(data) for _ in range(n)]
+    overhead_frac = data.draw(st.floats(0.0, 0.2))
+    garbage_idx = data.draw(st.integers(0, len(GARBAGE) - 1))
+    check_select_parity(table_seed, lanes, overhead_frac, garbage_idx,
+                        backend="pallas")
+
+
 @settings(max_examples=15, deadline=None)
 @given(data=st.data())
 def test_masked_bank_updates_match_scalar(data):
@@ -181,7 +204,9 @@ def test_parity_checkers_fixed_examples():
                       e_frac=float(rng.uniform(0.0, 2.5)),
                       active=bool(rng.random() < 0.75))
                  for _ in range(n)]
+        backend = "pallas" if trial % 2 else "xla"
         check_select_parity(int(rng.integers(2**31)), lanes,
                             float(rng.uniform(0, 0.2)),
-                            int(rng.integers(len(GARBAGE))))
+                            int(rng.integers(len(GARBAGE))),
+                            backend=backend)
     check_masked_bank_parity(7, 5, 30)

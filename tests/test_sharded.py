@@ -72,6 +72,42 @@ class TestLaneMeshInProcess:
                   "relaxed_code"):
             np.testing.assert_array_equal(getattr(a, f), getattr(b, f), f)
 
+    def test_pallas_backend_composes_with_lane_mesh(self):
+        """`backend="pallas"` under a lane mesh (shard_map: one kernel
+        launch per device on its lane shard) — picks bitwise-equal to
+        the unsharded XLA engine, churn never re-traces."""
+        from benchmarks.common import family_table, deadline_range
+        from repro.core.batched import BatchedAlertEngine
+
+        table = family_table("image")
+        rng = np.random.default_rng(3)
+        s = 48
+        mus, sds, phis = (rng.uniform(0.6, 2.5, s),
+                          rng.uniform(0.01, 0.4, s),
+                          rng.uniform(0.05, 0.6, s))
+        d = rng.choice(deadline_range(table, 5), s)
+        qg = rng.uniform(0.5, 0.9, s)
+        eg = rng.uniform(0.5, 3.0, s) * float(
+            np.median(table.run_power) * np.median(table.latency))
+        gk = rng.integers(0, 2, s)
+        act = rng.random(s) < 0.9
+        host = BatchedAlertEngine(table, None)
+        pal = BatchedAlertEngine(table, None, mesh=_mesh1(),
+                                 backend="pallas")
+        kw = dict(accuracy_goal=qg, energy_goal=eg)
+        a = host.select(mus, sds, phis, d, goal_kind=gk, active=act, **kw)
+        b = pal.select(mus, sds, phis, d, goal_kind=gk, active=act, **kw)
+        for f in ("model_index", "power_index", "predicted_latency",
+                  "predicted_accuracy", "predicted_energy", "feasible",
+                  "relaxed_code"):
+            np.testing.assert_array_equal(getattr(a, f), getattr(b, f), f)
+        n0 = pal.n_compiles()
+        for _ in range(4):
+            act[rng.integers(0, s)] ^= True
+            gk = np.where(rng.random(s) < 0.3, 1 - gk, gk)
+            pal.select(mus, sds, phis, d, goal_kind=gk, active=act, **kw)
+        assert pal.n_compiles() == n0, "sharded pallas churn re-traced"
+
     def test_engine_as_arrays_returns_jax(self):
         import jax
         from benchmarks.common import family_table, deadline_range
