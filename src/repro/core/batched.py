@@ -240,6 +240,7 @@ class BatchedAlertEngine:
                 (True, False): functools.partial(
                     self._select_hetero_impl, predictions=False),
             }
+        self._impls = impls
         self._estimate_jit = jax.jit(self._estimate_impl, **jit_kw)
         self._select_jit = jax.jit(impls[(False, True)], **jit_kw)
         self._select_pick_jit = jax.jit(impls[(False, False)], **jit_kw)
@@ -296,14 +297,9 @@ class BatchedAlertEngine:
                  (True, True): _hetero(True),
                  (True, False): _hetero(False)}
         if self.mesh is not None:
-            from jax.experimental.shard_map import shard_map
-
-            from repro.launch.mesh import lane_pspec
-            p = lane_pspec(self.mesh)
-            impls = {(het, pred): shard_map(
-                         fn, mesh=self.mesh,
-                         in_specs=(p,) * (8 if het else 5),
-                         out_specs=(p,) * 7, check_rep=False)
+            from repro.launch.mesh import lane_shard_map
+            impls = {(het, pred): lane_shard_map(
+                         fn, self.mesh, n_in=8 if het else 5, n_out=7)
                      for (het, pred), fn in impls.items()}
         return impls
 
@@ -715,6 +711,35 @@ class BatchedAlertEngine:
                 + self._select_hetero_jit._cache_size()
                 + self._select_hetero_pick_jit._cache_size())
 
+    def select_step_impl(self):
+        """Traceable heterogeneous pick-only select for embedding inside a
+        caller's OWN jitted graph (the traffic megatick's per-round scan
+        body, DESIGN.md §7).
+
+        Returns a callable ``(mu, sigma, phi, deadline, accuracy_goal,
+        energy_goal, goal_kind, active) -> 7-tuple`` with the exact
+        semantics of :meth:`select` with ``predictions=False`` — including
+        the host wrapper's sigma floor, which is applied inside the
+        returned callable so per-lane picks are bitwise identical to the
+        standalone dispatch.  On a Pallas engine the callable launches the
+        fused ``alert_select`` kernel (already ``shard_map``-wrapped under
+        a mesh); on an XLA engine under a mesh it is wrapped in
+        ``shard_map`` here so the caller's scan shards its lane axis the
+        same way (the decision grid has no cross-lane op, so per-device
+        execution is exact).
+        """
+        base = self._impls[(True, False)]
+        if self.mesh is not None and self.backend == "xla":
+            from repro.launch.mesh import lane_shard_map
+            base = lane_shard_map(base, self.mesh, n_in=8, n_out=7)
+
+        def step(mu, sd, phi, deadline, acc_goal, en_goal, gk, act):
+            """One traced pick-only select (sigma floored like `_vec`)."""
+            return base(mu, jnp.maximum(sd, 1e-6), phi, deadline,
+                        acc_goal, en_goal, gk, act)
+
+        return step
+
 
 def _goal_record_step(buf, pos, count, delivered, m, depth):
     """Jitted masked ring-buffer push for the sharded goal bank — the
@@ -735,6 +760,68 @@ def _goal_current_step(goal, buf, count, window):
     need = goal * window - total
     remaining = window - count
     per_input = need - (remaining - 1) * goal
+    return jnp.where(count == 0, goal, per_input)
+
+
+def pairwise_sum_cols(cols):
+    """Sum a list of equal-shaped arrays in numpy's pairwise-summation
+    order, as a static expression tree of binary adds.
+
+    ``np.sum(buf, axis=1)`` is NOT a left fold: numpy accumulates in
+    8-wide blocks combined as ``((r0+r1)+(r2+r3))+((r4+r5)+(r6+r7))``
+    (with a plain fold below 8 terms and recursive halving above 128,
+    the halving point rounded down to a multiple of 8).  An XLA
+    ``sum(axis=1)`` reduce uses yet another order.  Building the same
+    tree column by column makes a traced window sum bitwise-identical
+    to the host goal bank's — the one ulp hazard DESIGN.md §6 documents
+    for the sharded bank, closed here for the traffic megatick
+    (``tests/test_traffic.py`` pins this against numpy for every depth
+    the recursion shape changes at).
+    """
+    n = len(cols)
+    if n == 0:
+        raise ValueError("pairwise_sum_cols needs at least one column")
+    if n < 8:
+        res = cols[0]
+        for c in cols[1:]:
+            res = res + c
+        return res
+    if n <= 128:
+        r = list(cols[:8])
+        i = 8
+        while i + 8 <= n:
+            for j in range(8):
+                r[j] = r[j] + cols[i + j]
+            i += 8
+        res = ((r[0] + r[1]) + (r[2] + r[3])) + \
+            ((r[4] + r[5]) + (r[6] + r[7]))
+        while i < n:
+            res = res + cols[i]
+            i += 1
+        return res
+    n2 = n // 2
+    n2 -= n2 % 8
+    return pairwise_sum_cols(cols[:n2]) + pairwise_sum_cols(cols[n2:])
+
+
+def goal_current_step_hostsum(goal, buf, count, window, f_zero=0.0):
+    """:func:`_goal_current_step` with the window total summed in numpy's
+    pairwise order (:func:`pairwise_sum_cols`) — the traceable twin of
+    the HOST :meth:`WindowedGoalBank.current_goal`, bitwise included,
+    used by the traffic megatick scan (DESIGN.md §7).
+
+    ``f_zero`` must be a RUNTIME zero (a traced scalar argument, not a
+    literal) when this runs under jit: XLA CPU contracts ``a * b + c``
+    chains into one-rounding FMAs, which numpy never does, so the two
+    products below are pinned by adding the runtime zero — the compiler
+    can't fold the add away, and even if it contracts it,
+    ``fma(a, b, 0) == round(a * b)`` exactly, so both products round
+    separately just like the host bank's.  Eager callers can leave the
+    default (eager ops never contract)."""
+    total = pairwise_sum_cols([buf[:, c] for c in range(buf.shape[1])])
+    need = (goal * window + f_zero) - total
+    remaining = window - count
+    per_input = need - ((remaining - 1) * goal + f_zero)
     return jnp.where(count == 0, goal, per_input)
 
 

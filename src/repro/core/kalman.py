@@ -281,6 +281,13 @@ def _fused_fleet_step(mu, sigma, gain, q, obs, prof, miss, mask,
     return slow + idle_out
 
 
+#: Public traceable alias of the fused Eq. 6 + Eq. 8 bank step, for
+#: callers that embed the feedback update inside their own jitted graph
+#: (the traffic megatick's per-round scan — DESIGN.md §7).  Same
+#: per-lane math, bit for bit, as :func:`observe_fleet`'s dispatch.
+fused_fleet_step = _fused_fleet_step
+
+
 def _mask_vec(mask, s: int):
     """``[S]`` bool mask from ``None`` / numpy / jax input."""
     if mask is None:
@@ -533,6 +540,14 @@ class SlowdownFilterBank(_LaneBank):
         return (self.mu0, self.sigma0, self.gain0,
                 self.process_noise_floor)
 
+    def step_params(self) -> tuple:
+        """The scalar hyperparameters of this bank's Eq. 6 recurrence, in
+        the argument order :func:`fused_fleet_step` expects after the
+        slow-down state and observation vectors: ``(Q0, alpha, R,
+        miss_inflation)``."""
+        return (self.process_noise_floor, self.alpha, self.meas_noise,
+                self.miss_inflation)
+
     def observe(self, observed_latency: np.ndarray,
                 profiled_latency: np.ndarray,
                 deadline_missed: np.ndarray | None = None,
@@ -594,6 +609,12 @@ class IdlePowerFilterBank(_LaneBank):
 
     def _priors(self) -> tuple:
         return (self.phi0, self.variance0)
+
+    def step_params(self) -> tuple:
+        """The scalar hyperparameters of this bank's Eq. 8 recurrence, in
+        the argument order :func:`fused_fleet_step` expects after the
+        idle-power state and observation vectors: ``(S, V)``."""
+        return (self.process_noise, self.meas_noise)
 
     def observe(self, idle_power: np.ndarray, active_power: np.ndarray,
                 mask: np.ndarray | None = None) -> np.ndarray:

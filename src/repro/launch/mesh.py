@@ -75,6 +75,22 @@ def lane_pspec(mesh):
     return PartitionSpec(mesh.axis_names[0])
 
 
+def lane_shard_map(fn, mesh, *, n_in: int, n_out: int):
+    """``shard_map`` a flat-signature traceable ``fn`` over a 1-D lane
+    mesh: all ``n_in`` inputs and ``n_out`` outputs shard their leading
+    (lane) axis per :func:`lane_pspec`.  The single seam behind every
+    per-device lane launch — the Pallas select backend and the traffic
+    megatick's in-scan select both wrap through here, so the
+    no-collectives contract (the decision grid has no cross-lane op —
+    DESIGN.md §6) is enforced in one place (``check_rep=False``: the
+    kernels return unreplicated per-shard outputs)."""
+    from jax.experimental.shard_map import shard_map
+
+    p = lane_pspec(mesh)
+    return shard_map(fn, mesh=mesh, in_specs=(p,) * n_in,
+                     out_specs=(p,) * n_out, check_rep=False)
+
+
 def batch_axes(mesh) -> tuple[str, ...]:
     """Axes the global batch shards over."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -33,6 +33,10 @@ class Request:
     payload: Any = None
     arrival: float = 0.0
     req_id: int | None = None
+    # Heap sequence assigned at first admission; lets requeue() restore
+    # the original EDF submission-order tie-break after a deferral.
+    _seq: int | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
 
 class DeadlineBatcher:
@@ -67,8 +71,23 @@ class DeadlineBatcher:
         seq = next(self._counter)
         if req.req_id is None:
             req.req_id = seq
+        req._seq = seq
         heapq.heappush(self._heap, (req.deadline, seq, req))
         return True
+
+    def requeue(self, req: Request) -> None:
+        """Re-enqueue an *already admitted* request (e.g. a gateway
+        deferral).  Unlike :meth:`submit` this bypasses ``max_queue``
+        backpressure — deferral is not a new arrival, so an admitted
+        request can never be shed here — and reuses the request's
+        original heap seq, preserving the EDF submission-order tie-break
+        across any number of deferrals.  Raises on a request that was
+        never admitted by :meth:`submit`."""
+        if req._seq is None:
+            raise ValueError(
+                "requeue() takes a request previously admitted by "
+                "submit(); this one has no heap seq")
+        heapq.heappush(self._heap, (req.deadline, req._seq, req))
 
     def __len__(self) -> int:
         return len(self._heap)

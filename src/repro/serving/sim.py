@@ -443,6 +443,68 @@ def deliver_tick(table: ProfileTable, st, i_glob: np.ndarray,
                          profiled=profiled, miss_flag=miss_flag)
 
 
+def deliver_step(i_glob, j_act, scale, dvec, phi_true, *,
+                 latency_kl, run_power_kl, q_fail, is_anytime_k,
+                 lvl_lat_kml, lvl_valid_km, lvl_acc_km, f_zero=0.0):
+    """Traceable twin of :func:`deliver_tick` for jitted callers (the
+    traffic megatick scan — DESIGN.md §7): identical op-for-op math on
+    jnp arrays, so under f64 every output is bitwise-equal to the numpy
+    kernel on the same inputs (``tests/test_traffic.py`` pins this).
+
+    ``i_glob``/``j_act``/``scale``/``dvec`` are the traced per-lane
+    round inputs; the keyword arrays are the profile-table constants the
+    host kernel reads from ``table``/``st`` (baked into the caller's
+    trace once).  ``profiled_pick`` is fixed to the *executed* config's
+    profiled latency (the gateway case — only the ALERT_DNN ablation,
+    which never runs through this path, decouples the two).  Returns the
+    :class:`DeliveredTick` fields as a plain tuple in declaration order.
+
+    ``f_zero``: jitted callers must pass a RUNTIME zero (a traced scalar
+    argument).  XLA CPU contracts ``a * b + c`` into one-rounding FMAs —
+    the ``energy`` accumulation is the one mul+add chain here — while
+    the numpy kernel always rounds twice; adding a runtime zero to each
+    product pins the numpy rounding (``fma(a, b, 0) == round(a * b)``
+    exactly, so the value is identical whether or not the compiler
+    contracts).  Eager callers can leave the default — eager ops never
+    contract.
+    """
+    import jax.numpy as jnp
+
+    # The constants arrive as numpy (indexable by tracers only as jnp
+    # arrays); asarray at trace time is free and keeps f64 under the
+    # caller's enable_x64 scope.
+    latency_kl = jnp.asarray(latency_kl)
+    run_power_kl = jnp.asarray(run_power_kl)
+    is_anytime_k = jnp.asarray(is_anytime_k)
+    lvl_lat_kml = jnp.asarray(lvl_lat_kml)
+    lvl_valid_km = jnp.asarray(lvl_valid_km)
+    lvl_acc_km = jnp.asarray(lvl_acc_km)
+    m = lvl_lat_kml.shape[1]
+    lat = latency_kl[i_glob, j_act] * scale
+    missed = lat > dvec
+    # Advanced indices split by a slice put the lane axis first -> [S, M]
+    # (numpy semantics, which jnp follows — same layout as the host
+    # kernel's fancy index).
+    lvl_lat = lvl_lat_kml[i_glob, :, j_act]
+    completed = lvl_valid_km[i_glob] & \
+        (lvl_lat * scale[:, None] <= dvec[:, None])
+    any_done = completed.any(axis=1)
+    last_done = (m - 1) - jnp.argmax(completed[:, ::-1], axis=1)
+    acc = jnp.where(any_done, lvl_acc_km[i_glob, last_done], q_fail)
+    run_t = jnp.minimum(lat, dvec)
+    p = run_power_kl[i_glob, j_act]
+    energy = (p * run_t + f_zero) + \
+        (phi_true * p * jnp.maximum(dvec - run_t, 0.0) + f_zero)
+    rows = jnp.arange(i_glob.shape[0])
+    use_obs = missed & is_anytime_k[i_glob] & any_done
+    obs_lat = lvl_lat[rows, last_done] * scale
+    obs_prof = lvl_lat[rows, last_done]
+    observed = jnp.where(use_obs, obs_lat, run_t)
+    profiled = jnp.where(use_obs, obs_prof, latency_kl[i_glob, j_act])
+    miss_flag = jnp.where(use_obs, False, missed)
+    return (run_t, acc, energy, missed, p, observed, profiled, miss_flag)
+
+
 # ------------------------------------------------------------------ #
 # Fleet-scale simulation: S streams, one engine call per tick         #
 # ------------------------------------------------------------------ #

@@ -12,6 +12,11 @@ serving system:
   (per-session Kalman/goal state exported and re-imported into recycled
   lanes, zero re-traces), with EDF admission control and queue
   backpressure layered on the deadline batcher;
+* :mod:`repro.traffic.megatick` — the device-resident round clock: the
+  gateway's inner loop flattened into one jitted, donated ``lax.scan``
+  over rounds with all per-session state ``[S]``-resident
+  (bitwise-identical results in the coarse-tick regime, ~10-100x the
+  host loop's rounds/sec at fleet scale);
 * :mod:`repro.traffic.loadsweep` — the offered-load sweep harness
   (goodput / p99 / energy / miss-rate vs load, alert vs hindsight
   static) recorded in ``BENCH_controller.json``.
@@ -24,10 +29,12 @@ from repro.traffic.workloads import (ArrivalProcess, DiurnalProcess,
                                      generate_requests)
 from repro.traffic.gateway import GatewayResult, SessionGateway
 from repro.traffic.loadsweep import hindsight_static_config, sweep_loads
+from repro.traffic.megatick import MegatickGateway
 
 __all__ = [
     "ArrivalProcess", "PoissonProcess", "MMPPProcess", "DiurnalProcess",
     "FlashCrowdProcess", "TenantSpec", "Session", "TrafficRequest",
     "build_sessions", "generate_requests", "SessionGateway",
-    "GatewayResult", "hindsight_static_config", "sweep_loads",
+    "GatewayResult", "MegatickGateway", "hindsight_static_config",
+    "sweep_loads",
 ]

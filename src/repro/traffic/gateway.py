@@ -252,6 +252,9 @@ class SessionGateway:
                              and int(self._resident[ln]) not in needed]
                 evictable.sort()
                 ev_lanes = [ln for _, ln in evictable[:n_evict]]
+            else:
+                ev_lanes = []
+            if ev_lanes:
                 slow_s = self.slow.export_lanes(ev_lanes)
                 idle_s = self.idle.export_lanes(ev_lanes)
                 goal_s = self.goal_bank.export_lanes(ev_lanes)
@@ -266,6 +269,17 @@ class SessionGateway:
                     self._resident[ln] = -1
                     self.pages_out += 1
                 free += ev_lanes
+            if len(free) < len(missing):
+                # Eviction could not produce enough idle lanes (every
+                # other resident is busy or needed this round).  A
+                # silent zip truncation here would leave lanes[pos] ==
+                # -1 and corrupt the last lane downstream, so fail
+                # loudly instead.
+                raise RuntimeError(
+                    f"page-in underflow: {len(missing)} non-resident "
+                    f"session(s) need lanes but only {len(free)} lane(s)"
+                    " are free or evictable (the rest are busy or needed"
+                    " this round)")
             paged_lanes, paged_sids, fresh_lanes, fresh_sids = \
                 [], [], [], []
             for pos, ln in zip(missing, free):
@@ -298,6 +312,10 @@ class SessionGateway:
                     fresh_lanes,
                     goal=[sessions[s].constraints.accuracy_goal or 0.0
                           for s in fresh_sids])
+        if np.any(lanes < 0):
+            raise RuntimeError(
+                "page-in invariant violated: a requested session has no "
+                "lane after paging (lanes={})".format(lanes.tolist()))
         self._last_used[lanes] = round_k
         return lanes
 
@@ -345,7 +363,16 @@ class SessionGateway:
             requests,
             key=lambda r: (r.arrival,
                            0 if r.req_id is None else r.req_id))
-        row_of = {id(r): k for k, r in enumerate(requests)}
+        # Pair every request with its sorted result row directly
+        # (enumerate after the sort).  Keying rows on object identity
+        # would collapse two occurrences of the same object into one
+        # row, so true duplicates are rejected up front instead.
+        if len({id(r) for r in requests}) != len(requests):
+            raise ValueError(
+                "the same TrafficRequest object was offered more than "
+                "once; every offered request must be a distinct object")
+        for k, r in enumerate(requests):
+            r._row = k
         n = len(requests)
         out = GatewayResult(
             sid=np.asarray([r.sid for r in requests], dtype=np.int64),
@@ -379,7 +406,7 @@ class SessionGateway:
             while ri < n and requests[ri].arrival <= now:
                 req = requests[ri]
                 if not queue.submit(req):
-                    out.status[row_of[id(req)]] = REJECTED_BACKPRESSURE
+                    out.status[req._row] = REJECTED_BACKPRESSURE
                 ri += 1
             # --- EDF pop onto the lanes that are free this round, at
             # most one request per session (a session is sequential:
@@ -406,14 +433,18 @@ class SessionGateway:
                 seen.add(req.sid)
                 batch.append(req)
             for req in deferred:
-                queue.submit(req)
+                # Deferral is not a new arrival: requeue() bypasses
+                # max_queue backpressure (the request was already
+                # admitted) and restores the original heap seq so the
+                # EDF submission-order tie-break survives deferral.
+                queue.requeue(req)
             for req in queue.rejected[n_rej:]:   # failed fast this round
-                out.status[row_of[id(req)]] = REJECTED_INFEASIBLE
-                out.start[row_of[id(req)]] = now
+                out.status[req._row] = REJECTED_INFEASIBLE
+                out.start[req._row] = now
             if batch:
                 last_completion = max(last_completion, self._serve_round(
                     batch, sess, now, round_k, policy, static_config,
-                    lanes_arange, row_of, out))
+                    lanes_arange, out))
                 n_rounds += 1
             round_k += 1
         out.horizon = max(last_completion,
@@ -424,7 +455,7 @@ class SessionGateway:
         return out
 
     def _serve_round(self, batch, sess, now: float, round_k: int,
-                     policy: str, static_config, lanes_arange, row_of,
+                     policy: str, static_config, lanes_arange,
                      out: GatewayResult) -> float:
         """One synchronous round: page the batch's sessions in, score all
         lanes with one masked engine call (or the fixed static config),
@@ -470,7 +501,7 @@ class SessionGateway:
             self.goal_bank.record(d.accuracy, mask=act)
         last = now
         for req, lane in zip(batch, lanes):
-            rid = row_of[id(req)]
+            rid = req._row
             out.status[rid] = SERVED
             out.start[rid] = now
             out.latency[rid] = d.latency[lane]

@@ -47,7 +47,8 @@ def sweep_loads(table: ProfileTable, mix: Sequence[TenantSpec],
                 horizon: float, seed: int = 0,
                 max_queue: int | None = None, tick: float | None = None,
                 schemes: Sequence[str] = ("alert", "oracle_static"),
-                deadline_cv: float = 0.0) -> list[dict]:
+                deadline_cv: float = 0.0,
+                gateway: str = "host") -> list[dict]:
     """Sweep offered load over ``loads`` for each scheme.
 
     One :class:`~repro.traffic.gateway.SessionGateway` per scheme serves
@@ -57,8 +58,20 @@ def sweep_loads(table: ProfileTable, mix: Sequence[TenantSpec],
     rate, and per scheme: goodput, p50/p99 sojourn, served-miss /
     reject / SLO-miss rates, energy per request and per good request,
     paging and compile counters.
+
+    ``gateway="megatick"`` serves every scheme through the
+    device-resident :class:`~repro.traffic.megatick.MegatickGateway`
+    instead — bitwise-identical records in the coarse-tick regime, one
+    compiled super-round scan for the whole sweep (DESIGN.md §7).
     """
-    gw = SessionGateway(table, n_lanes, max_queue=max_queue, tick=tick) \
+    if gateway == "megatick":
+        from repro.traffic.megatick import MegatickGateway as GW
+    elif gateway == "host":
+        GW = SessionGateway
+    else:
+        raise ValueError(f"gateway must be 'host' or 'megatick', "
+                         f"got {gateway!r}")
+    gw = GW(table, n_lanes, max_queue=max_queue, tick=tick) \
         if "alert" in schemes else None
     gw_static = gw_noadm = None
     static_cfg: tuple[int, int] | None = None
@@ -69,14 +82,13 @@ def sweep_loads(table: ProfileTable, mix: Sequence[TenantSpec],
         static_cfg = hindsight_static_config(
             table, mix[0].phases, mix[0].goal, mix[0].constraints,
             seed=seed)
-        gw_static = SessionGateway(table, n_lanes, max_queue=max_queue,
-                                   tick=tick)
+        gw_static = GW(table, n_lanes, max_queue=max_queue, tick=tick)
     if "alert_no_admission" in schemes:
         # Ablation probe: same controller, admission control disabled
         # (no fail-fast, unbounded queue) — quantifies what shedding
         # buys.
-        gw_noadm = SessionGateway(table, n_lanes, max_queue=None,
-                                  tick=tick, min_feasible_latency=0.0)
+        gw_noadm = GW(table, n_lanes, max_queue=None,
+                      tick=tick, min_feasible_latency=0.0)
     rows = []
     for li, load in enumerate(loads):
         sessions = build_sessions([t.scaled(load) for t in mix], horizon,

@@ -1,0 +1,597 @@
+"""Device-resident gateway megatick: the round clock as ONE jitted scan.
+
+:class:`~repro.traffic.gateway.SessionGateway` runs its round clock as a
+host Python loop — one engine dispatch, one delivery call, one feedback
+call, and one LRU paging pass *per round*.  That loop is the scalability
+wall (ROADMAP open item 1): at 10^5-10^6 sessions the host is in the
+inner loop of every round.  :class:`MegatickGateway` serves the same
+workload with the whole inner round clock — effective-deadline math
+(``T_goal - queueing delay``), the masked select, the shared delivery
+kernel, and the Eq. 6/8 + goal-window feedback — inside ONE jitted
+``lax.scan`` over rounds, dispatched in fixed-size *super-round* chunks
+with every state buffer donated: a full load sweep never gathers state
+and never re-traces.
+
+**Regime contract.**  The host loop's only genuinely data-dependent
+control flow is admission: which requests are submitted, failed fast,
+deferred, and paged.  At ``tick >= max(rel_deadline)`` — the gateway's
+default tick — every admission decision is *latency-independent*: a
+round's run time is capped at its effective deadline
+(``run_t = min(lat, dvec) <= dvec <= rel_deadline <= tick``), so every
+lane's ``busy_until`` lands at or before the next round boundary and
+every lane is idle at every boundary.  Under that contract the megatick
+splits the loop in two exact halves:
+
+* a **host planner** that replays the host loop's clock, arrival
+  ingestion, EDF fail-fast admission, backpressure, same-session
+  deferral, and LRU paging *bookkeeping* up front (reusing the same
+  :class:`~repro.serving.batcher.DeadlineBatcher` and the same paging
+  order, so ``pages_in``/``pages_out`` and every disposition match the
+  host loop exactly), emitting a dense ``[R, L]`` round schedule;
+* a **device scan** over that schedule, holding all per-session filter
+  and goal-window state ``[S]``-resident (sessions are gathered to lanes
+  by index and scattered back each round) — which makes session paging a
+  semantic no-op: the host loop's ``export_lanes``/``import_lanes``
+  round-trips are bitwise lossless and every per-lane operation is
+  lane-independent, so lane placement cannot alter any outcome.
+
+A tick below the largest relative deadline genuinely couples admission
+to in-scan latencies (a busy lane defers its session's next request);
+that regime stays on the host loop, and :meth:`run` raises on it rather
+than silently diverge.
+
+Every traced piece is the host loop's op-for-op twin —
+:meth:`~repro.core.batched.BatchedAlertEngine.select_step_impl` (sigma
+floor included), :func:`~repro.serving.sim.deliver_step`,
+:func:`~repro.core.kalman.fused_fleet_step`, the goal bank's record step
+and the numpy-pairwise window sum
+(:func:`~repro.core.batched.goal_current_step_hostsum`) — so a megatick
+:class:`~repro.traffic.gateway.GatewayResult` is bitwise-identical per
+session to the fixed host loop at matched tick (``tests/test_traffic.py``
+pins this against the gateway golden trace).  ``backend="pallas"``
+launches the fused ``alert_select`` kernel inside the scan; ``mesh=``
+shards the lane axis of every round via ``shard_map``
+(:func:`repro.launch.mesh.lane_shard_map`).  DESIGN.md §7 has the layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.batched import (BatchedAlertEngine, _goal_record_step,
+                                goal_codes, goal_current_step_hostsum)
+from repro.core.kalman import (IdlePowerFilterBank, SlowdownFilterBank,
+                               fused_fleet_step)
+from repro.core.profiles import ProfileTable
+from repro.serving.batcher import DeadlineBatcher
+from repro.serving.sim import deliver_step
+from repro.traffic.gateway import (REJECTED_BACKPRESSURE,
+                                   REJECTED_INFEASIBLE, SERVED,
+                                   GatewayResult, SessionGateway)
+from repro.traffic.workloads import Session, TrafficRequest, \
+    generate_requests
+
+
+@dataclasses.dataclass
+class _Plan:
+    """The planner's dense round schedule: ``[R, L]`` per-lane inputs for
+    ``n_active`` real rounds (padded with all-inactive rounds to a
+    super-round multiple), plus the :class:`GatewayResult` shell with
+    every disposition already decided."""
+
+    out: GatewayResult
+    n_active: int
+    act: np.ndarray         # [R, L] bool
+    sid: np.ndarray         # [R, L] int64 dense session index; S inactive
+    row: np.ndarray         # [R, L] int64 result row; -1 inactive
+    rel: np.ndarray         # [R, L] f64 nominal relative deadline
+    arr: np.ndarray         # [R, L] f64 arrival instant
+    e_goal: np.ndarray      # [R, L] f64 effective energy goal
+    scale: np.ndarray       # [R, L] f64 true latency scale xi * lambda
+    gk: np.ndarray          # [R, L] int64 goal codes
+    now: np.ndarray         # [R] f64 round instants k * tick
+
+
+class MegatickGateway:
+    """Open-loop traffic with the round clock flattened on device.
+
+    Drop-in for :class:`~repro.traffic.gateway.SessionGateway` in the
+    coarse-tick regime (``tick >= max(rel_deadline)`` — the gateway's
+    default tick): same constructor surface, same :meth:`run` contract,
+    bitwise-identical :class:`GatewayResult` per session, but the inner
+    round loop runs as a chunked, donated ``lax.scan`` with all
+    per-session state ``[S]``-resident on device (see the module
+    docstring for the regime contract).  ``chunk`` is the super-round
+    size: rounds per device dispatch (the schedule is padded to a chunk
+    multiple, so every dispatch reuses one compiled executable —
+    ``n_compiles`` stays flat across a whole load sweep).
+    """
+
+    def __init__(self, table: ProfileTable, n_lanes: int, *,
+                 phi_true: float = 0.25, overhead: float = 0.0,
+                 tick: float | None = None,
+                 max_queue: int | None = None,
+                 min_feasible_latency: float | None = None,
+                 accuracy_window: int = 10, backend: str = "xla",
+                 mesh=None, chunk: int = 128):
+        self.table = table
+        self.n_lanes = int(n_lanes)
+        self.phi_true = float(phi_true)
+        self.tick = tick
+        self.max_queue = max_queue
+        self.min_feasible_latency = float(table.latency.min()) \
+            if min_feasible_latency is None else float(min_feasible_latency)
+        self.accuracy_window = int(accuracy_window)
+        self.chunk = int(chunk)
+        self.mesh = mesh
+        if mesh is not None and self.n_lanes % mesh.size:
+            raise ValueError(
+                f"lane-sharded megatick needs n_lanes divisible by the "
+                f"mesh size ({mesh.size}); got {self.n_lanes}")
+        self.engine = BatchedAlertEngine(table, None, overhead=overhead,
+                                         backend=backend, mesh=mesh)
+        self._st = table.staircase_tensors()
+        groups = table.anytime_groups()
+        self._is_anytime = np.zeros(len(table.candidates), bool)
+        self._is_anytime[sorted({i for g in groups.values()
+                                 for i in g})] = True
+        self._chunk_jits: dict = {}
+
+    # -------------------------------------------------------------- #
+    # host planner                                                    #
+    # -------------------------------------------------------------- #
+    def _reset_lru(self, n_sessions: int) -> None:
+        """Fresh LRU paging bookkeeping (between runs).
+
+        Everything is indexed by DENSE session index (``sid_index``
+        order), not raw sid — a bijection, so lane assignment, eviction
+        order, and page counts are unchanged — which lets the whole
+        twin run on flat arrays instead of per-sid dicts."""
+        self._resident = np.full(self.n_lanes, -1, dtype=np.int64)
+        self._lane_arr = np.full(max(n_sessions, 1), -1, dtype=np.int64)
+        self._stored_arr = np.zeros(max(n_sessions, 1), dtype=bool)
+        self._last_used = np.zeros(self.n_lanes, dtype=np.int64)
+        self.pages_in = self.pages_out = 0
+
+    def _page_in_meta(self, sids: np.ndarray,
+                      round_k: int) -> np.ndarray:
+        """:meth:`SessionGateway._page_in`'s lane assignment and paging
+        accounting, without moving any state.
+
+        The ``[S]``-resident scan buffers make the page *transfers* a
+        semantic no-op (export/import round-trips are bitwise lossless
+        and every per-lane op is lane-independent), but WHICH sessions
+        page — and therefore ``pages_in``/``pages_out`` — is still the
+        host loop's observable, so the LRU bookkeeping is reproduced
+        exactly, vectorized: free lanes in ascending order, then
+        evictions by (last_used, lane) via a stable argsort over
+        ascending lane indices (identical to the host's tuple sort),
+        assigned to missing batch positions in order.  Under the regime
+        contract every lane is idle at every round boundary, so the
+        host loop's idle mask is all-true here by construction.
+
+        ``sids`` are dense session indices (see :meth:`_reset_lru`).
+        """
+        lanes = self._lane_arr[sids]
+        miss = np.nonzero(lanes < 0)[0]
+        if miss.size:
+            free = np.nonzero(self._resident < 0)[0]
+            n_evict = miss.size - free.size
+            if n_evict > 0:
+                mask = self._resident >= 0
+                mask[mask] = ~np.isin(self._resident[mask], sids)
+                cand = np.nonzero(mask)[0]
+                order = np.argsort(self._last_used[cand], kind="stable")
+                ev = cand[order][:n_evict]
+                olds = self._resident[ev]
+                self._stored_arr[olds] = True
+                self._lane_arr[olds] = -1
+                self._resident[ev] = -1
+                self.pages_out += int(ev.size)
+                free = np.concatenate([free, ev])
+            if free.size < miss.size:
+                # Unreachable in-regime (a batch never exceeds the lane
+                # count and every non-needed resident is evictable), but
+                # fail loudly rather than truncate — same invariant as
+                # the host loop's page-in guard.
+                raise RuntimeError(
+                    f"page-in underflow: {miss.size} session(s) need "
+                    f"lanes but only {free.size} are available")
+            take = free[:miss.size]
+            msids = sids[miss]
+            lanes[miss] = take
+            self._resident[take] = msids
+            self._lane_arr[msids] = take
+            self.pages_in += int(self._stored_arr[msids].sum())
+            self._stored_arr[msids] = False
+        self._last_used[lanes] = round_k
+        return lanes
+
+    def _plan(self, sessions: Sequence[Session],
+              requests: list[TrafficRequest] | None,
+              sid_index: dict[int, int]) -> _Plan:
+        """Replay the host loop's clock and admission up front.
+
+        Runs the EXACT control flow of the fixed
+        :meth:`SessionGateway.run` — stable arrival sort, duplicate
+        rejection, round skip-ahead, arrival submission with
+        backpressure, EDF pop with fail-fast and same-session deferral
+        (via :meth:`DeadlineBatcher.requeue`), LRU paging bookkeeping —
+        under the regime contract (every lane idle at every boundary),
+        and emits the dense round schedule the scan consumes.
+        """
+        sess = {s.sid: s for s in sessions}
+        if requests is None:
+            requests = generate_requests(sessions)
+        requests = sorted(
+            requests,
+            key=lambda r: (r.arrival,
+                           0 if r.req_id is None else r.req_id))
+        if len({id(r) for r in requests}) != len(requests):
+            raise ValueError(
+                "the same TrafficRequest object was offered more than "
+                "once; every offered request must be a distinct object")
+        for k, r in enumerate(requests):
+            r._row = k
+        n = len(requests)
+        out = GatewayResult(
+            sid=np.asarray([r.sid for r in requests], dtype=np.int64),
+            index=np.asarray([r.index for r in requests], dtype=np.int64),
+            arrival=np.asarray([r.arrival for r in requests]),
+            status=np.full(n, REJECTED_BACKPRESSURE, dtype=np.int64),
+            start=np.zeros(n), latency=np.zeros(n), sojourn=np.zeros(n),
+            missed=np.zeros(n, bool), accuracy=np.zeros(n),
+            energy=np.zeros(n), model_index=np.zeros(n, dtype=np.int64),
+            power_index=np.zeros(n, dtype=np.int64))
+        if n == 0:
+            return _Plan(out, 0, *(np.zeros((0, self.n_lanes)),) * 8,
+                         np.zeros(0))
+        tick = self.tick if self.tick is not None else \
+            max(r.rel_deadline for r in requests)
+        max_rel = max(r.rel_deadline for r in requests)
+        if tick < max_rel:
+            raise ValueError(
+                f"megatick needs tick >= max relative deadline "
+                f"({tick} < {max_rel}): a finer tick couples admission "
+                f"to in-round latencies (busy lanes at round "
+                f"boundaries) — use SessionGateway for that regime")
+        self._reset_lru(len(sessions))
+        queue = DeadlineBatcher(batch_size=self.n_lanes,
+                                min_feasible_latency=
+                                self.min_feasible_latency,
+                                max_queue=self.max_queue)
+        code_of: dict = {}      # goal_codes is pure per goal: memoize
+        for s in sessions:
+            if s.goal not in code_of:
+                code_of[s.goal] = int(goal_codes([s.goal])[0])
+        gk_of = {s.sid: code_of[s.goal] for s in sessions}
+        # Flat per-field accumulators (one entry per served request),
+        # scattered into the [R, L] schedule in one vectorized pass —
+        # the planner's per-request Python is the megatick's only
+        # remaining host cost, so keep the inner loop lean.
+        now_l: list[float] = []
+        f_round: list[int] = []
+        f_lane: list[int] = []
+        f_row: list[int] = []
+        f_sid: list[int] = []
+        f_rel: list[float] = []
+        f_arr: list[float] = []
+        f_eg: list[float] = []
+        f_sc: list[float] = []
+        f_gk: list[int] = []
+        ri = 0
+        round_k = 0
+        while ri < n or len(queue):
+            if not len(queue):
+                round_k = max(round_k, SessionGateway._round_of(
+                    requests[ri].arrival, tick))
+            now = round_k * tick
+            while ri < n and requests[ri].arrival <= now:
+                req = requests[ri]
+                if not queue.submit(req):
+                    out.status[req._row] = REJECTED_BACKPRESSURE
+                ri += 1
+            n_rej = len(queue.rejected)
+            # avail == n_lanes and no busy-lane deferral: the regime
+            # contract makes every lane idle at every round boundary
+            # (run_t <= dvec <= rel_deadline <= tick).
+            batch: list[TrafficRequest] = []
+            seen: set[int] = set()
+            deferred: list[TrafficRequest] = []
+            defer_budget = 4 * self.n_lanes
+            while len(batch) < self.n_lanes and \
+                    len(deferred) <= defer_budget:
+                req = queue.pop_one(now)
+                if req is None:
+                    break
+                if req.sid in seen:
+                    deferred.append(req)
+                    continue
+                seen.add(req.sid)
+                batch.append(req)
+            for req in deferred:
+                queue.requeue(req)
+            for req in queue.rejected[n_rej:]:
+                out.status[req._row] = REJECTED_INFEASIBLE
+                out.start[req._row] = now
+            if batch:
+                dense = [sid_index[r.sid] for r in batch]
+                lanes = self._page_in_meta(
+                    np.asarray(dense, dtype=np.int64), round_k)
+                k = len(now_l)
+                now_l.append(now)
+                for req, lane, dk in zip(batch, lanes, dense):
+                    s = sess[req.sid]
+                    f_round.append(k)
+                    f_lane.append(int(lane))
+                    f_row.append(req._row)
+                    f_sid.append(dk)
+                    f_rel.append(req.rel_deadline)
+                    f_arr.append(req.arrival)
+                    f_eg.append((s.constraints.energy_goal or 0.0)
+                                * s.trace.deadline_scale[req.index])
+                    f_sc.append(s.trace.xi[req.index]
+                                * s.trace.lam[req.index])
+                    f_gk.append(gk_of[req.sid])
+            round_k += 1
+        n_active = len(now_l)
+        n_pad = -n_active % self.chunk
+        r_tot = n_active + n_pad
+        s_tot = len(sessions)
+        ln = self.n_lanes
+        act = np.zeros((r_tot, ln), bool)
+        sid = np.full((r_tot, ln), s_tot, dtype=np.int64)
+        row = np.full((r_tot, ln), -1, dtype=np.int64)
+        rel = np.zeros((r_tot, ln))
+        arr = np.zeros((r_tot, ln))
+        e_goal = np.zeros((r_tot, ln))
+        scale = np.ones((r_tot, ln))
+        gk = np.zeros((r_tot, ln), dtype=np.int64)
+        now_v = np.zeros(r_tot)
+        now_v[:n_active] = now_l
+        kk = np.asarray(f_round, dtype=np.int64)
+        lv = np.asarray(f_lane, dtype=np.int64)
+        rw = np.asarray(f_row, dtype=np.int64)
+        act[kk, lv] = True
+        sid[kk, lv] = f_sid
+        row[kk, lv] = rw
+        rel[kk, lv] = f_rel
+        arr[kk, lv] = f_arr
+        e_goal[kk, lv] = f_eg
+        scale[kk, lv] = f_sc
+        gk[kk, lv] = f_gk
+        # Each row's disposition is unique (served XOR rejected XOR
+        # shed), so the batched assignment reproduces the host loop's
+        # in-round writes exactly.
+        out.status[rw] = SERVED
+        out.start[rw] = now_v[kk]
+        return _Plan(out, n_active, act, sid, row, rel, arr, e_goal,
+                     scale, gk, now_v)
+
+    # -------------------------------------------------------------- #
+    # device scan                                                     #
+    # -------------------------------------------------------------- #
+    def _chunk_fn(self, policy: str, static_config):
+        """Build (once per policy/config) the jitted super-round chunk:
+        a donated ``lax.scan`` over ``chunk`` rounds.  Profile constants
+        are baked into the trace; all shapes are fixed at
+        ``[chunk, n_lanes]`` / ``[S]``, so every dispatch of a run — and
+        every run of a load sweep — reuses one compiled executable."""
+        key = (policy, static_config)
+        if key in self._chunk_jits:
+            return self._chunk_jits[key]
+        import jax
+        import jax.numpy as jnp
+
+        ln = self.n_lanes
+        st = self._st
+        consts = dict(
+            latency_kl=np.asarray(self.table.latency, np.float64),
+            run_power_kl=np.asarray(self.table.run_power, np.float64),
+            q_fail=float(self.table.q_fail),
+            is_anytime_k=self._is_anytime,
+            lvl_lat_kml=np.asarray(st.lvl_lat, np.float64),
+            lvl_valid_km=np.asarray(st.lvl_valid, bool),
+            lvl_acc_km=np.asarray(st.lvl_acc, np.float64))
+        phi_true = self.phi_true
+        window = self.accuracy_window
+        depth = max(window - 1, 0)
+
+        if policy == "static":
+            i_fix, j_fix = int(static_config[0]), int(static_config[1])
+
+            def body_static(fz, x):
+                """Deliver-only round: fixed config, no controller
+                state (the hindsight-static baseline)."""
+                act, sidv, gkv, relv, arrv, egl, scl, now = x
+                dvec = jnp.where(act, relv - (now - arrv), 1.0)
+                i = jnp.full((ln,), i_fix, jnp.int64)
+                j = jnp.full((ln,), j_fix, jnp.int64)
+                run_t, acc, energy, missed, *_ = deliver_step(
+                    i, j, scl, dvec, phi_true, f_zero=fz, **consts)
+                sojourn = (now - arrv) + run_t
+                return fz, (run_t, acc, energy, missed, i, j, sojourn)
+
+            def chunk_static(f_zero, xs):
+                """One super-round dispatch of the static policy
+                (``f_zero``: runtime zero pinning mul+add rounding
+                against FMA contraction — see `deliver_step`)."""
+                _, ys = jax.lax.scan(body_static, f_zero, xs)
+                return ys
+
+            fn = jax.jit(chunk_static)
+            self._chunk_jits[key] = fn
+            return fn
+
+        select = self.engine.select_step_impl()
+        slow_tpl = SlowdownFilterBank(1)
+        idle_tpl = IdlePowerFilterBank(1)
+        slow_params = slow_tpl.step_params()
+        idle_params = idle_tpl.step_params()
+
+        def body(carry, x, goal, fz):
+            """One round, the host `_serve_round` op for op: gather the
+            round's sessions to lanes, effective-deadline select,
+            deliver, fused Eq. 6/8 + goal-window feedback, scatter
+            back.  Inactive lanes carry the host loop's benign defaults
+            (dvec 1, scale 1, goal 0) and their session index points
+            one past the state buffers, so gathers clamp to a sanitised
+            row and scatters drop — no masking pass anywhere."""
+            mu, sigma, gain, qn, phv, var, buf, pos, count = carry
+            act, sidv, gkv, relv, arrv, egl, scl, now = x
+            mu_l, sd_l, ph_l = mu[sidv], sigma[sidv], phv[sidv]
+            g_l, q_l, v_l = gain[sidv], qn[sidv], var[sidv]
+            dvec = jnp.where(act, relv - (now - arrv), 1.0)
+            if depth:
+                acc_goal = goal_current_step_hostsum(
+                    goal[sidv], buf[sidv], count[sidv], window, fz)
+            else:
+                acc_goal = goal[sidv]
+            i, j, *_ = select(mu_l, sd_l, ph_l, dvec, acc_goal, egl,
+                              gkv, act)
+            (run_t, acc, energy, missed, p, observed, profiled,
+             miss_flag) = deliver_step(i, j, scl, dvec, phi_true,
+                                       f_zero=fz, **consts)
+            prof_m = jnp.where(act, profiled, 1.0)
+            act_p = jnp.where(act, p, 1.0)
+            mu_n, sd_n, g_n, q_n, ph_n, v_n = fused_fleet_step(
+                mu_l, sd_l, g_l, q_l, observed, prof_m, miss_flag, act,
+                *slow_params, ph_l, v_l, phi_true * p, act_p,
+                *idle_params)
+            put = lambda s, v: s.at[sidv].set(v, mode="drop")
+            mu, sigma = put(mu, mu_n), put(sigma, sd_n)
+            gain, qn = put(gain, g_n), put(qn, q_n)
+            phv, var = put(phv, ph_n), put(var, v_n)
+            if depth:
+                buf_n, pos_n, cnt_n = _goal_record_step(
+                    buf[sidv], pos[sidv], count[sidv], acc, act, depth)
+                buf = buf.at[sidv].set(buf_n, mode="drop")
+                pos, count = put(pos, pos_n), put(count, cnt_n)
+            sojourn = (now - arrv) + run_t
+            return ((mu, sigma, gain, qn, phv, var, buf, pos, count),
+                    (run_t, acc, energy, missed, i, j, sojourn))
+
+        def chunk_alert(carry, goal, f_zero, xs):
+            """One super-round dispatch: scan `chunk` rounds with the
+            `[S]` state carried (and donated) across dispatches
+            (``f_zero``: runtime zero pinning mul+add rounding against
+            FMA contraction — see `goal_current_step_hostsum`)."""
+            return jax.lax.scan(lambda c, x: body(c, x, goal, f_zero),
+                                carry, xs)
+
+        fn = jax.jit(chunk_alert, donate_argnums=0)
+        self._chunk_jits[key] = fn
+        return fn
+
+    def _init_carry(self, sessions: Sequence[Session]):
+        """Fresh ``[S]``-resident state: every session starts at the
+        filter priors and its own goal (exactly what the host loop's
+        first-touch ``reset_lanes`` installs), so first-round behaviour
+        matches the host gateway bit for bit."""
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        s = len(sessions)
+        slow = SlowdownFilterBank(s)
+        idle = IdlePowerFilterBank(s)
+        depth = max(self.accuracy_window - 1, 0)
+        goal0 = np.asarray(
+            [sess.constraints.accuracy_goal or 0.0 for sess in sessions],
+            dtype=np.float64)
+        with enable_x64():
+            carry = tuple(jnp.asarray(a) for a in (
+                slow.mu, slow.sigma, slow.gain, slow.process_noise,
+                idle.phi, idle.variance,
+                np.zeros((s, max(depth, 1))),
+                np.zeros(s, dtype=np.int64),
+                np.zeros(s, dtype=np.int64)))
+            goal = jnp.asarray(goal0)
+        return carry, goal
+
+    # -------------------------------------------------------------- #
+    # public API                                                      #
+    # -------------------------------------------------------------- #
+    def run(self, sessions: Sequence[Session],
+            requests: list[TrafficRequest] | None = None, *,
+            policy: str = "alert",
+            static_config: tuple[int, int] | None = None) -> GatewayResult:
+        """Serve one workload to completion — the
+        :meth:`SessionGateway.run` contract, executed as planner +
+        chunked device scan.  Raises when the effective tick is below
+        the workload's largest relative deadline (the coarse-tick
+        regime contract; see the module docstring)."""
+        if policy not in ("alert", "static"):
+            raise ValueError(policy)
+        if policy == "static" and static_config is None:
+            raise ValueError("policy='static' needs static_config=(i, j)")
+        from jax.experimental import enable_x64
+
+        t0 = time.perf_counter()
+        sid_index = {s.sid: k for k, s in enumerate(sessions)}
+        plan = self._plan(sessions, requests, sid_index)
+        self.last_plan_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        out = plan.out
+        if plan.n_active:
+            fn = self._chunk_fn(policy, static_config)
+            with enable_x64():
+                if policy == "alert":
+                    carry, goal = self._init_carry(sessions)
+                for lo in range(0, plan.act.shape[0], self.chunk):
+                    hi = lo + self.chunk
+                    xs = (plan.act[lo:hi], plan.sid[lo:hi],
+                          plan.gk[lo:hi], plan.rel[lo:hi],
+                          plan.arr[lo:hi], plan.e_goal[lo:hi],
+                          plan.scale[lo:hi], plan.now[lo:hi])
+                    if policy == "alert":
+                        carry, ys = fn(carry, goal, 0.0, xs)
+                    else:
+                        ys = fn(0.0, xs)
+                    a = plan.act[lo:hi]
+                    rows = plan.row[lo:hi][a]
+                    out.latency[rows] = np.asarray(ys[0])[a]
+                    out.accuracy[rows] = np.asarray(ys[1])[a]
+                    out.missed[rows] = np.asarray(ys[3])[a]
+                    out.model_index[rows] = np.asarray(ys[4])[a]
+                    out.power_index[rows] = np.asarray(ys[5])[a]
+                    out.sojourn[rows] = np.asarray(ys[6])[a]
+                    # Energy is recomputed HERE, in numpy, from
+                    # bitwise-stable scan outputs: its mul+add chain is
+                    # the one expression XLA CPU may still contract into
+                    # an FMA inside the fused scan body, and the host
+                    # loop's numpy kernel never does.
+                    rt = out.latency[rows]
+                    ii, jj = out.model_index[rows], out.power_index[rows]
+                    pw = self.table.run_power[ii, jj]
+                    dv = (plan.rel[lo:hi]
+                          - (plan.now[lo:hi, None] - plan.arr[lo:hi]))[a]
+                    out.energy[rows] = pw * rt + self.phi_true * pw * \
+                        np.maximum(dv - rt, 0.0)
+        # Wall time of the round clock itself (scan dispatch + result
+        # scatter), separate from the host planner — what the megatick
+        # bench reports as the device-resident rounds/sec.
+        self.last_scan_s = time.perf_counter() - t0
+        served = out.status == SERVED
+        last_completion = float(np.max(out.start[served]
+                                       + out.latency[served])) \
+            if served.any() else 0.0
+        out.horizon = max(last_completion,
+                          float(out.arrival[-1]) if out.offered else 0.0)
+        out.n_rounds = plan.n_active
+        out.pages_in = getattr(self, "pages_in", 0)
+        out.pages_out = getattr(self, "pages_out", 0)
+        out.n_compiles = self.n_compiles()
+        return out
+
+    def n_compiles(self) -> tuple[int, int]:
+        """(estimate, scan) jit-cache sizes, the
+        :meth:`BatchedAlertEngine.n_compiles` convention lifted to the
+        megatick: the second entry counts compiled super-round
+        executables — 1 means every dispatch of every run (a whole load
+        sweep) reused one compiled scan."""
+        return (0, sum(f._cache_size()
+                       for f in self._chunk_jits.values()))

@@ -41,10 +41,75 @@ def golden_config():
     return table, cons
 
 
+def gateway_config(table):
+    """Fixed overloaded multi-tenant gateway scenario (seed-1, 2x the
+    lane-saturating rate) shared by the generator and
+    ``tests/test_traffic.py``'s golden-trace assertion."""
+    from benchmarks.common import deadline_range
+    from repro.serving.sim import CPU_ENV, MEMORY_ENV
+    from repro.traffic import PoissonProcess, TenantSpec, build_sessions
+
+    deadline = float(deadline_range(table, 5)[3])
+    n_lanes, per_tenant = 8, 12
+    rate = 2.0 * (n_lanes / deadline) / (2 * per_tenant)
+    mix = [
+        TenantSpec("minE", Goal.MINIMIZE_ENERGY,
+                   Constraints(deadline=deadline, accuracy_goal=0.78),
+                   PoissonProcess(rate), n_sessions=per_tenant,
+                   phases=CPU_ENV),
+        TenantSpec("maxA", Goal.MAXIMIZE_ACCURACY,
+                   Constraints.from_power_budget(deadline,
+                                                 GOLDEN_BUDGET_W),
+                   PoissonProcess(rate), n_sessions=per_tenant,
+                   phases=MEMORY_ENV),
+    ]
+    sessions = build_sessions(mix, 12 * deadline, seed=GOLDEN_SEED)
+    return sessions, n_lanes, deadline
+
+
+def summarize_gateway(res) -> dict:
+    """Flatten a GatewayResult into the drift-pinned summary floats."""
+    from repro.traffic.gateway import (REJECTED_BACKPRESSURE,
+                                       REJECTED_INFEASIBLE, SERVED)
+
+    status = res.status
+    return {
+        "offered": int(status.size),
+        "served": int((status == SERVED).sum()),
+        "rejected_infeasible": int((status == REJECTED_INFEASIBLE).sum()),
+        "rejected_backpressure": int(
+            (status == REJECTED_BACKPRESSURE).sum()),
+        "good": int(res.good.sum()),
+        "goodput_rps": res.goodput,
+        "energy_sum_j": float(res.energy[status == SERVED].sum()),
+        "p50_sojourn_s": res.percentile_sojourn(50),
+        "p99_sojourn_s": res.percentile_sojourn(99),
+        "served_miss_rate": res.served_miss_rate,
+        "n_rounds": res.n_rounds,
+        "pages_in": res.pages_in,
+        "pages_out": res.pages_out,
+        "horizon_s": res.horizon,
+    }
+
+
+def compute_gateway_golden(table) -> dict:
+    """Golden gateway disposition: the seed-1 overload workload served
+    by the host round loop (the megatick is asserted bitwise-identical
+    to the host separately, so one fixture pins both)."""
+    from repro.traffic import SessionGateway, generate_requests
+
+    sessions, n_lanes, deadline = gateway_config(table)
+    gw = SessionGateway(table, n_lanes, tick=deadline,
+                        max_queue=4 * n_lanes)
+    res = gw.run(sessions, generate_requests(sessions))
+    return summarize_gateway(res)
+
+
 def compute_golden() -> dict:
     table, cons = golden_config()
     out = {"seed": GOLDEN_SEED, "budget_w": GOLDEN_BUDGET_W,
-           "goal": "maximize_accuracy", "envs": {}}
+           "goal": "maximize_accuracy", "envs": {},
+           "gateway": compute_gateway_golden(table)}
     for env_name in ("default", "cpu", "memory"):
         trace = EnvironmentTrace(ENVS[env_name], seed=GOLDEN_SEED)
         sim = InferenceSim(table, trace)

@@ -482,3 +482,330 @@ class TestFleetServerConstraintOverride:
         srv.admit()     # same lane, no constraints installed
         with pytest.raises(ValueError, match="Constraints"):
             srv.serve_tick([prompt, prompt], [c0, None])
+
+
+# ------------------------------------------------------------------ #
+# round-loop regressions: requeue semantics, duplicate offers,        #
+# page-in invariants                                                  #
+# ------------------------------------------------------------------ #
+class TestRoundLoopRegressions:
+    def test_requeue_bypasses_backpressure_on_full_queue(self):
+        """A deferred (already admitted) request re-enters the heap even
+        when the queue sits at max_queue — deferral is not a new
+        arrival, so it can never be shed or recorded as overflow."""
+        b = DeadlineBatcher(batch_size=4, max_queue=2)
+        r1, r2 = Request(deadline=1.0), Request(deadline=2.0)
+        assert b.submit(r1) and b.submit(r2)
+        got = b.pop_one(now=0.0)
+        assert got is r1
+        r3 = Request(deadline=3.0)
+        assert b.submit(r3)              # queue back at max_queue
+        b.requeue(r1)                    # len 3 > max_queue: still ok
+        assert len(b) == 3
+        assert not b.overflowed and not b.rejected
+
+    def test_requeue_preserves_edf_tie_break_over_later_submits(self):
+        """Deferral keeps the request's ORIGINAL heap seq: after a
+        requeue it still beats same-deadline requests submitted after
+        it (the old submit-based requeue handed out a fresh seq and
+        inverted EDF submission order)."""
+        b = DeadlineBatcher(batch_size=4)
+        reqs = [Request(deadline=5.0) for _ in range(3)]
+        for r in reqs:
+            b.submit(r)
+        first = b.pop_one(now=0.0)
+        assert first is reqs[0]
+        b.requeue(first)
+        order = [b.pop_one(now=0.0) for _ in range(3)]
+        assert order == reqs             # seq 0 still wins the tie
+
+    def test_requeue_of_never_admitted_request_raises(self):
+        b = DeadlineBatcher(batch_size=4)
+        with pytest.raises(ValueError, match="submit"):
+            b.requeue(Request(deadline=1.0))
+
+    def test_refused_submit_consumes_no_seq(self):
+        """Backpressure refusal must not burn an id/seq — the next
+        admitted request's EDF tie-break is unaffected by the shed
+        one."""
+        b = DeadlineBatcher(batch_size=4, max_queue=1)
+        r1 = Request(deadline=5.0)
+        b.submit(r1)
+        shed = Request(deadline=5.0)
+        assert not b.submit(shed)
+        assert shed._seq is None and shed.req_id is None
+        b.pop_one(now=0.0)
+        r2 = Request(deadline=5.0)
+        b.submit(r2)
+        assert r2._seq == 1              # not 2: refusal consumed nothing
+
+    def test_duplicate_request_object_rejected(self, table):
+        dl = float(deadline_range(table, 5)[3])
+        tr = _short_trace(ENVS["default"], 3, 4)
+        sess = [Session(0, "t", Goal.MINIMIZE_ENERGY,
+                        Constraints(deadline=dl, accuracy_goal=0.7),
+                        np.arange(4) * dl, tr)]
+        reqs = generate_requests(sess)
+        gw = SessionGateway(table, 2, tick=dl)
+        with pytest.raises(ValueError, match="distinct object"):
+            gw.run(sess, reqs + [reqs[0]])
+
+    def test_page_in_underflow_raises(self, table):
+        """More sessions needing lanes than can ever be freed must fail
+        loudly (the old zip() silently truncated the batch)."""
+        dl = float(deadline_range(table, 5)[3])
+        tr = _short_trace(ENVS["default"], 3, 4)
+        sessions = {sid: Session(sid, "t", Goal.MINIMIZE_ENERGY,
+                                 Constraints(deadline=dl,
+                                             accuracy_goal=0.7),
+                                 np.arange(4) * dl, tr)
+                    for sid in range(3)}
+        gw = SessionGateway(table, 2, tick=dl)
+        gw._busy_until[:] = 1e9          # every lane mid-service
+        with pytest.raises(RuntimeError, match="page-in"):
+            gw._page_in([0, 1, 2], sessions, round_k=0, now=0.0)
+
+
+# ------------------------------------------------------------------ #
+# megatick building blocks: bitwise twins of the host kernels         #
+# ------------------------------------------------------------------ #
+class TestMegatickKernels:
+    @pytest.mark.parametrize("depth", list(range(1, 17)) + [
+        24, 40, 127, 128, 129, 200, 257])
+    def test_pairwise_sum_matches_numpy_bitwise(self, depth):
+        """The traced window sum reproduces numpy's pairwise-summation
+        order exactly, at every depth the recursion changes shape."""
+        import jax
+        from jax.experimental import enable_x64
+        from repro.core.batched import pairwise_sum_cols
+
+        rng = np.random.default_rng(depth)
+        buf = rng.uniform(-1.0, 1.0, (7, depth))
+        want = buf.sum(axis=1)
+        with enable_x64():
+            got = np.asarray(jax.jit(
+                lambda b: pairwise_sum_cols(
+                    [b[:, c] for c in range(b.shape[1])]))(buf))
+        np.testing.assert_array_equal(got, want)
+
+    def test_goal_current_hostsum_matches_bank_bitwise(self):
+        """Traced effective-goal compensation == the host bank's numpy
+        path, including the runtime-zero FMA-contraction guard."""
+        import jax
+        from jax.experimental import enable_x64
+        from repro.core.batched import goal_current_step_hostsum
+
+        rng = np.random.default_rng(7)
+        s, window = 64, 10
+        bank = WindowedGoalBank(rng.uniform(0.5, 0.9, s), s, window)
+        for _ in range(6):
+            bank.record(rng.uniform(0.0, 1.0, s),
+                        mask=rng.random(s) < 0.7)
+        want = bank.current_goal()
+        with enable_x64():
+            got = np.asarray(jax.jit(goal_current_step_hostsum,
+                                     static_argnums=3)(
+                bank.goal, bank._buf, bank._count, window, 0.0))
+        np.testing.assert_array_equal(got, want)
+
+    def test_deliver_step_matches_deliver_tick_bitwise(self, table):
+        """The traced delivery twin == the numpy kernel on every field,
+        under jit (where XLA's FMA contraction would bite without the
+        runtime-zero guard)."""
+        import jax
+        from jax.experimental import enable_x64
+        from repro.serving.sim import deliver_step, deliver_tick
+
+        st = table.staircase_tensors()
+        k, l = table.latency.shape
+        groups = table.anytime_groups()
+        is_any = np.zeros(len(table.candidates), bool)
+        is_any[sorted({i for g in groups.values() for i in g})] = True
+        rng = np.random.default_rng(3)
+        n = 256
+        i = rng.integers(0, k, n)
+        j = rng.integers(0, l, n)
+        scale = rng.uniform(0.5, 2.0, n)
+        dvec = rng.uniform(0.01, 2.0 * float(table.latency.max()), n)
+        want = deliver_tick(table, st, i, j, scale, dvec, 0.25, is_any,
+                            table.latency[i, j])
+        consts = dict(latency_kl=table.latency,
+                      run_power_kl=table.run_power,
+                      q_fail=float(table.q_fail), is_anytime_k=is_any,
+                      lvl_lat_kml=st.lvl_lat, lvl_valid_km=st.lvl_valid,
+                      lvl_acc_km=st.lvl_acc)
+        with enable_x64():
+            got = jax.jit(lambda ii, jj, sc, dv, fz: deliver_step(
+                ii, jj, sc, dv, 0.25, f_zero=fz, **consts))(
+                    i, j, scale, dvec, 0.0)
+        for name, a, b in zip(
+                ("latency", "accuracy", "energy", "missed", "run_power",
+                 "observed", "profiled", "miss_flag"),
+                (want.latency, want.accuracy, want.energy, want.missed,
+                 want.run_power, want.observed, want.profiled,
+                 want.miss_flag), got):
+            np.testing.assert_array_equal(np.asarray(b), a,
+                                          err_msg=name)
+
+
+# ------------------------------------------------------------------ #
+# megatick gateway: the device-resident round clock                   #
+# ------------------------------------------------------------------ #
+_RESULT_FIELDS = ("sid", "index", "arrival", "status", "start",
+                  "latency", "sojourn", "missed", "accuracy", "energy",
+                  "model_index", "power_index")
+
+
+def _assert_results_identical(host, mega):
+    for f in _RESULT_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(mega, f)), np.asarray(getattr(host, f)),
+            err_msg=f)
+    assert mega.horizon == host.horizon
+    assert mega.n_rounds == host.n_rounds
+    assert mega.pages_in == host.pages_in
+    assert mega.pages_out == host.pages_out
+
+
+def _paging_sessions(table, tick, dl):
+    sessions = []
+    for sid in range(6):
+        tr = _short_trace(ENVS["cpu"] if sid % 2 else ENVS["memory"],
+                          40 + sid, 25, deadline_cv=0.1)
+        arrivals = (2 * np.arange(25) + (sid % 2)) * tick
+        goal = Goal.MINIMIZE_ENERGY if sid % 3 else \
+            Goal.MAXIMIZE_ACCURACY
+        cons = Constraints(deadline=dl, accuracy_goal=0.8) \
+            if sid % 3 else Constraints.from_power_budget(dl, 170.0)
+        sessions.append(Session(sid, "t", goal, cons, arrivals, tr))
+    return sessions
+
+
+class TestMegatickGateway:
+    def test_bitwise_parity_through_paging(self, table):
+        """THE megatick acceptance property: the scanned round clock
+        reproduces the fixed host loop bitwise on a workload whose
+        sessions page in and out every round — every per-request field,
+        the paging counters, the round count, and the horizon."""
+        from repro.traffic import MegatickGateway
+
+        dl = float(deadline_range(table, 5)[3])
+        tick = dl * 2.5
+        sessions = _paging_sessions(table, tick, dl)
+        host = SessionGateway(table, 3, tick=tick).run(sessions)
+        mega = MegatickGateway(table, 3, tick=tick, chunk=16)
+        res = mega.run(sessions)
+        assert host.pages_in > 50, "must actually exercise paging"
+        _assert_results_identical(host, res)
+        assert res.n_compiles == (0, 1)
+
+    def test_overload_parity_and_no_retrace_across_loads(self, table):
+        """Backpressure, fail-fast, and same-session deferral all run on
+        the megatick's host planner — bitwise-equal dispositions under
+        8x overload, for both policies, with ONE compiled scan per
+        policy across all load points."""
+        from repro.traffic import MegatickGateway
+
+        dl = float(deadline_range(table, 5)[3])
+        cons = Constraints(deadline=dl, accuracy_goal=0.78)
+        n_lanes, s = 16, 64
+        mega = MegatickGateway(table, n_lanes, tick=dl,
+                               max_queue=4 * n_lanes, chunk=32)
+        for load in (2.0, 8.0):
+            rate = load * (n_lanes / dl) / s
+            mix = [TenantSpec("minE", Goal.MINIMIZE_ENERGY, cons,
+                              PoissonProcess(rate), n_sessions=s,
+                              phases=CPU_ENV)]
+            sessions = build_sessions(mix, 10 * dl, seed=11)
+            host = SessionGateway(table, n_lanes, tick=dl,
+                                  max_queue=4 * n_lanes)
+            res_h = host.run(sessions, generate_requests(sessions))
+            res_m = mega.run(sessions, generate_requests(sessions))
+            assert (res_h.status == REJECTED_INFEASIBLE).any() or \
+                (res_h.reject_rate > 0), "overload must shed"
+            _assert_results_identical(res_h, res_m)
+            res_hs = host.run(sessions, generate_requests(sessions),
+                              policy="static", static_config=(2, 1))
+            res_ms = mega.run(sessions, generate_requests(sessions),
+                              policy="static", static_config=(2, 1))
+            _assert_results_identical(res_hs, res_ms)
+        assert mega.n_compiles() == (0, 2)   # one scan per policy
+
+    def test_lane_mesh_composes_bitwise(self, table):
+        """A lane-sharded megatick (select shard_mapped inside the
+        scan) returns the same bits as the host loop."""
+        from repro.launch.mesh import make_lane_mesh
+        from repro.traffic import MegatickGateway
+
+        dl = float(deadline_range(table, 5)[3])
+        tick = dl * 2.5
+        sessions = _paging_sessions(table, tick, dl)
+        host = SessionGateway(table, 3, tick=tick).run(sessions)
+        res = MegatickGateway(table, 3, tick=tick,
+                              mesh=make_lane_mesh(1), chunk=16
+                              ).run(sessions)
+        _assert_results_identical(host, res)
+
+    def test_fine_tick_regime_raises(self, table):
+        """A tick below the largest relative deadline couples admission
+        to in-round latencies — the megatick refuses it instead of
+        silently diverging from the host loop."""
+        from repro.traffic import MegatickGateway
+
+        dl = float(deadline_range(table, 5)[3])
+        tr = _short_trace(ENVS["default"], 2, 4)
+        sess = [Session(0, "t", Goal.MINIMIZE_ENERGY,
+                        Constraints(deadline=dl, accuracy_goal=0.7),
+                        np.arange(4) * dl, tr)]
+        mega = MegatickGateway(table, 2, tick=dl / 4)
+        with pytest.raises(ValueError, match="SessionGateway"):
+            mega.run(sess)
+
+    def test_sweep_megatick_matches_host(self, table):
+        """sweep_loads(gateway='megatick') returns records identical to
+        the host gateway sweep (identical floats, not approximately)."""
+        dl = float(deadline_range(table, 5)[3])
+        cons = Constraints(deadline=dl, accuracy_goal=0.78)
+        n_lanes = 8
+        mix = [TenantSpec("minE", Goal.MINIMIZE_ENERGY, cons,
+                          PoissonProcess(2.0 * (n_lanes / dl) / 16),
+                          n_sessions=16, phases=CPU_ENV)]
+        kw = dict(n_lanes=n_lanes, horizon=8 * dl, seed=3,
+                  max_queue=4 * n_lanes, tick=dl)
+        host = sweep_loads(table, mix, [0.5, 4.0], **kw)
+        mega = sweep_loads(table, mix, [0.5, 4.0], gateway="megatick",
+                           **kw)
+        for rh, rm in zip(host, mega):
+            for scheme in rh["schemes"]:
+                sh, sm = rh["schemes"][scheme], rm["schemes"][scheme]
+                for key in sh:
+                    if key == "n_compiles":
+                        assert sm[key] == [0, 1]
+                        continue
+                    assert sh[key] == sm[key], (scheme, key)
+
+
+class TestGatewayGoldenTrace:
+    def test_gateway_matches_checked_in_golden(self, table):
+        """Scheme-drift pin for the round loop itself: the seed-1
+        overload fixture's dispositions / energy / sojourn percentiles
+        match ``golden_traces.json`` exactly — for the host loop AND
+        the megatick (one fixture pins both, since the megatick must be
+        bitwise-equal)."""
+        import json
+        import os
+
+        from tests.make_golden_traces import (gateway_config,
+                                              summarize_gateway)
+        from repro.traffic import MegatickGateway
+
+        path = os.path.join(os.path.dirname(__file__),
+                            "golden_traces.json")
+        with open(path) as f:
+            want = json.load(f)["gateway"]
+        sessions, n_lanes, deadline = gateway_config(table)
+        for GW in (SessionGateway, MegatickGateway):
+            gw = GW(table, n_lanes, tick=deadline, max_queue=4 * n_lanes)
+            got = summarize_gateway(gw.run(sessions,
+                                           generate_requests(sessions)))
+            assert got == want, GW.__name__
