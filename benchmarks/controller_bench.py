@@ -604,6 +604,250 @@ def bench_traffic(quick: bool = False, n_sessions: int = 1024,
     }
 
 
+def _faults_workload(seed: int = 11, horizon_rounds: int = 24):
+    """Canonical chaos workload shared by ``bench_faults`` and the
+    kill-resume CLI legs: one min-energy tenant pool at ~saturating
+    load over 8 lanes, coarse tick (``tick == T_goal``) so the same
+    scenario serves the energy claims AND the megatick parity leg."""
+    from benchmarks.common import deadline_range, family_table
+    from repro.serving.sim import CPU_ENV
+    from repro.traffic import PoissonProcess, TenantSpec, build_sessions
+
+    table = family_table("image")
+    dl = float(deadline_range(table, 5)[3])
+    cons = Constraints(deadline=dl, accuracy_goal=0.78)
+    n_lanes = 8
+    n_sessions = 3 * n_lanes
+    horizon = horizon_rounds * dl
+    rate = 1.0 * (n_lanes / dl) / n_sessions
+    mix = [TenantSpec("min-energy", Goal.MINIMIZE_ENERGY, cons,
+                      PoissonProcess(rate), n_sessions=n_sessions,
+                      phases=CPU_ENV)]
+    sessions = build_sessions(mix, horizon, seed=seed)
+    return table, sessions, n_lanes, dl, horizon, cons
+
+
+def bench_faults(quick: bool = False, seed: int = 11) -> dict:
+    """Chaos matrix (DESIGN.md §10): the four fault classes of
+    ``repro.traffic.faults.FAULT_KINDS`` injected into the gateway, the
+    full ALERT controller vs the frozen hindsight-static config over
+    the identical seeded workload and perturbations.
+
+    Claims recorded per fault class:
+
+    * **adaptation beats frozen** — at matched goodput (each side
+      delivers >= 95 % of the other's), ALERT spends less energy per
+      deadline-met request than the frozen config; where the fault
+      knocks goodput apart, ALERT dominates outright (more goodput AND
+      a lower served-miss rate) — the volatility argument of PAPER.md
+      §3.2 under injected volatility;
+    * **megatick parity under fire** — the device-resident round clock
+      reproduces the host gateway bitwise under every fault class (the
+      scan carries the lane-death mask);
+    * **detection** — on the pinned straggler scenario the Kalman-bank
+      detector trips exactly the faulted lane (ALERT's own Eq. 7
+      posterior as the sensor) and stays silent on the clean trace;
+    * **kill/resume** — a run killed mid-sweep (in-process
+      InjectedFailure; the CLI ``--faults-kill-resume`` leg repeats
+      this with a real SIGKILL in a subprocess) resumes from the atomic
+      checkpoint bit-exactly.
+
+    Deterministic (seeded workloads + schedules, no timing in any
+    claim); ``quick`` only shortens the horizon.  ``platform`` /
+    ``host_fallback`` tag the record honestly: every claim here is
+    arithmetic, not speed, so the tags mark provenance only.
+    """
+    import tempfile
+
+    import jax
+
+    from repro.runtime.ft import InjectedFailure
+    from repro.traffic import (FAULT_KINDS, KalmanLaneDetector,
+                               LaneStraggler, MegatickGateway,
+                               PoissonProcess, SessionGateway,
+                               TenantSpec, build_sessions, FaultSchedule,
+                               generate_requests, scenario)
+    from repro.traffic.loadsweep import hindsight_static_config
+    from repro.serving.sim import CPU_ENV
+
+    table, sessions, n_lanes, dl, horizon, cons = _faults_workload(
+        seed=seed, horizon_rounds=12 if quick else 24)
+    static = hindsight_static_config(table, CPU_ENV,
+                                     Goal.MINIMIZE_ENERGY, cons,
+                                     seed=seed)
+    fields = ("sid", "index", "arrival", "status", "start", "latency",
+              "sojourn", "missed", "accuracy", "energy", "model_index",
+              "power_index")
+    gw_alert = SessionGateway(table, n_lanes, tick=dl,
+                              max_queue=4 * n_lanes)
+    gw_static = SessionGateway(table, n_lanes, tick=dl,
+                               max_queue=4 * n_lanes)
+    mega = MegatickGateway(table, n_lanes, tick=dl,
+                           max_queue=4 * n_lanes, chunk=8)
+    kinds: dict = {}
+    for kind in FAULT_KINDS:
+        fs = scenario(kind, n_lanes, start=horizon / 4, horizon=horizon,
+                      seed=seed, n_devices=4)
+        ra = gw_alert.run(sessions, generate_requests(sessions),
+                          faults=fs)
+        rs = gw_static.run(sessions, generate_requests(sessions),
+                           policy="static", static_config=static,
+                           faults=fs)
+        rm = mega.run(sessions, generate_requests(sessions), faults=fs)
+        parity = all(np.array_equal(getattr(ra, f), getattr(rm, f))
+                     for f in fields)
+        matched = ra.goodput >= 0.95 * rs.goodput and \
+            rs.goodput >= 0.95 * ra.goodput
+        if matched:
+            beats = ra.energy_per_good < rs.energy_per_good
+        else:
+            beats = ra.goodput > rs.goodput and \
+                ra.served_miss_rate < rs.served_miss_rate
+        kinds[kind] = {
+            "alert": {"energy_per_good_j": ra.energy_per_good,
+                      "goodput_rps": ra.goodput,
+                      "served_miss_rate": ra.served_miss_rate,
+                      "n_compiles": list(ra.n_compiles)},
+            "frozen": {"energy_per_good_j": rs.energy_per_good,
+                       "goodput_rps": rs.goodput,
+                       "served_miss_rate": rs.served_miss_rate},
+            "matched_goodput": matched,
+            "alert_beats_frozen": bool(beats),
+            "megatick_bitwise": bool(parity),
+        }
+    # --- detection on the pinned straggler scenario (n_sessions ==
+    # n_lanes: no paging, stable lane<->session identity; the same
+    # scenario tests/golden_traces.json pins) ---
+    det_mix = [TenantSpec("t", Goal.MINIMIZE_ENERGY,
+                          Constraints(deadline=dl, accuracy_goal=0.78),
+                          PoissonProcess(0.8 / dl), n_sessions=n_lanes,
+                          phases=CPU_ENV)]
+    det_sessions = build_sessions(det_mix, 40 * dl, seed=7)
+    det_faults = FaultSchedule(n_lanes, [LaneStraggler(
+        lane=5, start=10 * dl, magnitude=2.0, ramp_s=5 * dl)], seed=0)
+    det = KalmanLaneDetector(n_lanes)
+    SessionGateway(table, n_lanes, tick=dl).run(
+        det_sessions, generate_requests(det_sessions),
+        faults=det_faults, detector=det)
+    clean = KalmanLaneDetector(n_lanes)
+    SessionGateway(table, n_lanes, tick=dl).run(
+        det_sessions, generate_requests(det_sessions), detector=clean)
+    detection = {
+        "fault_lane": 5,
+        "tripped_lanes": [int(x) for x in np.nonzero(det.tripped)[0]],
+        "detection_latency_rounds": float(
+            det.detection_latency(5, 10 * dl) / dl),
+        "clean_false_positives": int(clean.tripped.sum()),
+        "recommendation": det.recommendation(5),
+    }
+    # --- kill/resume, in-process (the subprocess SIGKILL variant runs
+    # as the CI --faults-kill-resume leg) ---
+    ref = gw_alert.run(sessions, generate_requests(sessions))
+    with tempfile.TemporaryDirectory() as td:
+        ck = os.path.join(td, "ck")
+        try:
+            gw_static.run(sessions, generate_requests(sessions),
+                          checkpoint_dir=ck, checkpoint_every=3,
+                          kill_at_round=7)
+            resumed_bitwise = False       # the kill never fired
+        except InjectedFailure:
+            res = SessionGateway(table, n_lanes, tick=dl,
+                                 max_queue=4 * n_lanes).resume(
+                sessions, generate_requests(sessions),
+                checkpoint_dir=ck)
+            resumed_bitwise = all(
+                np.array_equal(getattr(ref, f), getattr(res, f))
+                for f in fields) and ref.n_rounds == res.n_rounds
+    return {
+        "n_lanes": n_lanes,
+        "n_sessions": len(sessions),
+        "deadline_s": dl,
+        "horizon_s": horizon,
+        "tick_s": dl,
+        "regime": "coarse_tick",
+        "static_config": list(static),
+        "platform": jax.default_backend(),
+        "host_fallback": jax.default_backend() == "cpu",
+        "kinds": kinds,
+        "detection": detection,
+        "kill_resume_bitwise": bool(resumed_bitwise),
+        "adaptation_beats_frozen_all_kinds": all(
+            k["alert_beats_frozen"] for k in kinds.values()),
+        "megatick_parity_all_kinds": all(
+            k["megatick_bitwise"] for k in kinds.values()),
+        "no_retrace": all(
+            k["alert"]["n_compiles"] == [0, 1] for k in kinds.values()),
+    }
+
+
+def _faults_kill_child(ckpt_dir: str, kill_round: int) -> None:
+    """CLI child for the kill-resume leg: serve the canonical chaos
+    workload with checkpointing and SIGKILL *ourselves* right after the
+    checkpoint at ``kill_round`` lands — a real uncatchable death, not
+    an exception the runtime could unwind gracefully."""
+    import signal
+
+    from repro.traffic import SessionGateway, generate_requests
+
+    table, sessions, n_lanes, dl, _, _ = _faults_workload()
+
+    class _SuicidalGateway(SessionGateway):
+        """Test double: dies by SIGKILL after checkpointing."""
+
+        def _save_checkpoint(self, rs, directory):
+            super()._save_checkpoint(rs, directory)
+            if rs.iters >= kill_round:
+                os.kill(os.getpid(), signal.SIGKILL)
+
+    gw = _SuicidalGateway(table, n_lanes, tick=dl,
+                          max_queue=4 * n_lanes)
+    gw.run(sessions, generate_requests(sessions),
+           checkpoint_dir=ckpt_dir, checkpoint_every=3)
+    raise SystemExit("kill child survived to completion — the SIGKILL "
+                     "never fired")
+
+
+def _faults_kill_resume() -> None:
+    """CLI leg: SIGKILL a checkpointing sweep in a subprocess mid-run,
+    restore in this process, and assert the resumed result is bitwise
+    identical to an uninterrupted run."""
+    import signal
+    import tempfile
+
+    from repro.traffic import SessionGateway, generate_requests
+
+    table, sessions, n_lanes, dl, _, _ = _faults_workload()
+    gw = SessionGateway(table, n_lanes, tick=dl, max_queue=4 * n_lanes)
+    ref = gw.run(sessions, generate_requests(sessions))
+    fields = ("sid", "index", "arrival", "status", "start", "latency",
+              "sojourn", "missed", "accuracy", "energy", "model_index",
+              "power_index")
+    with tempfile.TemporaryDirectory() as td:
+        ck = os.path.join(td, "ck")
+        p = subprocess.run(
+            [sys.executable, os.path.abspath(__file__),
+             "--faults-kill-child", ck, "6"],
+            capture_output=True, text=True, cwd=_ROOT)
+        assert p.returncode == -signal.SIGKILL, (
+            f"kill child exited {p.returncode}, expected "
+            f"-SIGKILL\nstdout: {p.stdout}\nstderr: {p.stderr}")
+        assert os.path.isdir(ck) or os.path.isdir(ck + ".old"), \
+            "kill child died before writing any checkpoint"
+        gw2 = SessionGateway(table, n_lanes, tick=dl,
+                             max_queue=4 * n_lanes)
+        res = gw2.resume(sessions, generate_requests(sessions),
+                         checkpoint_dir=ck)
+    bad = [f for f in fields
+           if not np.array_equal(getattr(ref, f), getattr(res, f))]
+    assert not bad, f"kill-resume: resumed result diverges on {bad}"
+    assert ref.n_rounds == res.n_rounds and \
+        (ref.pages_in, ref.pages_out) == (res.pages_in, res.pages_out)
+    print(f"kill-resume: SIGKILL at iteration >= 6, resumed from "
+          f"checkpoint, {len(fields)} result fields bitwise-identical "
+          f"({int(ref.served.sum())} served, {ref.n_rounds} rounds): "
+          f"ALL PASS")
+
+
 def _min_time(fn, reps: int) -> float:
     """Best-of-``reps`` wall time (noise-robust minimum)."""
     ts = []
@@ -798,6 +1042,9 @@ def run(quick: bool = False) -> dict:
     # Acceptance S=65536 always (parity is the point; the timing side is
     # cheap — one fused call per backend per tick).
     kernel = bench_kernel_select(s=65536, ticks=6 if quick else 12)
+    # Deterministic chaos matrix (seeded workloads + schedules, no
+    # timing in any claim), so quick mode only shortens the horizon.
+    faults = bench_faults(quick=quick)
     by_s = {r["n_streams"]: r for r in rows}
     out = {
         "bench": "controller_scoring",
@@ -808,6 +1055,7 @@ def run(quick: bool = False) -> dict:
         "sharded": sharded,
         "traffic": traffic,
         "kernel_select": kernel,
+        "faults": faults,
         "speedup_at_1024": by_s[1024]["speedup"],
     }
     out["checks"] = {
@@ -842,6 +1090,15 @@ def run(quick: bool = False) -> dict:
         # only (interpret mode on CPU — see bench_kernel_select).
         "kernel_picks_identical": kernel["picks_identical"],
         "kernel_no_retrace": kernel["no_retrace"],
+        "faults_adaptation_beats_frozen":
+            faults["adaptation_beats_frozen_all_kinds"],
+        "faults_megatick_parity": faults["megatick_parity_all_kinds"],
+        "faults_detection_tripped":
+            faults["detection"]["tripped_lanes"] ==
+            [faults["detection"]["fault_lane"]]
+            and faults["detection"]["clean_false_positives"] == 0,
+        "faults_kill_resume_bitwise": faults["kill_resume_bitwise"],
+        "faults_no_retrace": faults["no_retrace"],
     }
     with open(_OUT, "w") as f:
         json.dump(out, f, indent=2)
@@ -885,6 +1142,32 @@ def _print_traffic(t: dict) -> None:
               f"{m['parity_identical']}, compiles {m['n_compiles']})")
 
 
+def _print_faults(fr: dict) -> None:
+    """Render one bench_faults record as per-fault-class rows."""
+    print(f"  faults: {fr['n_sessions']} sessions over "
+          f"{fr['n_lanes']} lanes, tick={fr['tick_s'] * 1e3:.0f}ms "
+          f"({fr['regime']}, {fr['platform']}), frozen config "
+          f"{tuple(fr['static_config'])}")
+    for kind, k in fr["kinds"].items():
+        a, s_ = k["alert"], k["frozen"]
+        mode = "matched" if k["matched_goodput"] else "dominates"
+        print(f"    {kind:16s} alert E/good={a['energy_per_good_j']:6.2f}J "
+              f"good={a['goodput_rps']:6.1f} "
+              f"miss={a['served_miss_rate']:.3f} | frozen "
+              f"E/good={s_['energy_per_good_j']:6.2f}J "
+              f"good={s_['goodput_rps']:6.1f} "
+              f"miss={s_['served_miss_rate']:.3f} "
+              f"[{mode}, beats={k['alert_beats_frozen']}, "
+              f"megatick={k['megatick_bitwise']}]")
+    d = fr["detection"]
+    print(f"    detection: lane {d['fault_lane']} tripped "
+          f"{d['tripped_lanes']} after "
+          f"{d['detection_latency_rounds']:.0f} rounds "
+          f"({d['recommendation']}), clean false positives "
+          f"{d['clean_false_positives']}; kill/resume bitwise "
+          f"{fr['kill_resume_bitwise']}; no retrace {fr['no_retrace']}")
+
+
 def _print_kernel(kr: dict) -> None:
     """Render one bench_kernel_select record."""
     mode = "interpret" if kr["interpret"] else "compiled"
@@ -919,6 +1202,34 @@ def main() -> list[tuple]:
         assert kr["no_retrace"], \
             "kernel smoke: pallas backend re-traced under churn"
         print("kernel smoke: ALL PASS")
+        return []
+    if "--faults-kill-child" in sys.argv:
+        i = sys.argv.index("--faults-kill-child")
+        _faults_kill_child(sys.argv[i + 1], int(sys.argv[i + 2]))
+        return []
+    if "--faults-kill-resume" in sys.argv:
+        _faults_kill_resume()
+        return []
+    if "--faults-smoke" in sys.argv:
+        # CI smoke: the whole chaos matrix on a short horizon — asserts
+        # adaptation-beats-frozen per fault class, megatick parity
+        # under fire, detection on the pinned straggler, and in-process
+        # kill/resume, without touching BENCH_controller.json.
+        fr = bench_faults(quick=True)
+        _print_faults(fr)
+        assert fr["adaptation_beats_frozen_all_kinds"], \
+            "faults smoke: frozen config beat ALERT under a fault class"
+        assert fr["megatick_parity_all_kinds"], \
+            "faults smoke: megatick diverged from host under faults"
+        assert fr["detection"]["tripped_lanes"] == \
+            [fr["detection"]["fault_lane"]], \
+            "faults smoke: detector missed the straggler lane"
+        assert fr["detection"]["clean_false_positives"] == 0, \
+            "faults smoke: detector tripped on a clean trace"
+        assert fr["kill_resume_bitwise"], \
+            "faults smoke: resumed run diverged from uninterrupted run"
+        assert fr["no_retrace"], "faults smoke: engine re-traced"
+        print("faults smoke: ALL PASS")
         return []
     if "--traffic-smoke" in sys.argv:
         # CI smoke: a small-S short-horizon sweep through the full
@@ -999,6 +1310,7 @@ def main() -> list[tuple]:
           f"{sh['picks_identical']})")
     _print_traffic(out["traffic"])
     _print_kernel(out["kernel_select"])
+    _print_faults(out["faults"])
     failed = [k for k, v in out["checks"].items() if not v]
     print("claim checks:", "ALL PASS" if not failed else f"FAIL: {failed}")
     print(f"  wrote {_OUT} ({time.time() - t0:.0f}s)")

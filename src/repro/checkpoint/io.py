@@ -8,8 +8,13 @@ arrays and ``jax.device_put``s them with whatever shardings the *current*
 mesh prescribes — so a checkpoint written on a 2x16x16 multi-pod mesh
 restores onto 16x16 (elastic downscale) or vice versa without conversion.
 
-Atomicity: writes go to ``<dir>.tmp`` then ``os.replace`` — a crash
-mid-save never corrupts the latest checkpoint (restart safety).
+Atomicity: writes go to ``<dir>.tmp``; the previous checkpoint (if any)
+is renamed to ``<dir>.old`` before ``os.replace(tmp, dir)`` promotes the
+new one, and ``.old`` is removed only after the promote.  A crash at ANY
+point leaves either the old or the new checkpoint intact and findable —
+:func:`load_manifest` / :func:`restore` / :func:`restore_tree` fall back
+to ``<dir>.old`` when the primary directory is missing (the crash window
+between the rename and the replace).
 """
 
 from __future__ import annotations
@@ -35,7 +40,12 @@ def _flatten(tree) -> tuple[list[tuple[str, Any]], Any]:
 
 def save(directory: str, tree, step: int = 0, extra: dict | None = None
          ) -> str:
+    """Atomically write ``tree`` (any pytree of arrays) under
+    ``directory``.  Safe against a crash at any point: the previous
+    checkpoint survives as ``directory`` or ``<directory>.old`` until
+    the new one is fully promoted.  Returns ``directory``."""
     tmp = directory + ".tmp"
+    old = directory + ".old"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
@@ -52,14 +62,33 @@ def save(directory: str, tree, step: int = 0, extra: dict | None = None
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
+    # Torn-write safety: never rmtree the live checkpoint before the
+    # replacement exists.  Park it at .old, promote tmp, then drop .old.
+    if os.path.exists(old):
+        shutil.rmtree(old)
     if os.path.exists(directory):
-        shutil.rmtree(directory)
+        os.replace(directory, old)
     os.replace(tmp, directory)
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    return directory
+
+
+def _resolve(directory: str) -> str:
+    """Pick the live checkpoint dir: ``directory`` if present, else
+    ``<directory>.old`` (save crashed between park and promote)."""
+    if os.path.exists(directory):
+        return directory
+    old = directory + ".old"
+    if os.path.exists(old):
+        return old
     return directory
 
 
 def load_manifest(directory: str) -> dict:
-    with open(os.path.join(directory, "manifest.json")) as f:
+    """Read the checkpoint manifest (step / extra / leaf layout),
+    falling back to ``<directory>.old`` if a save was torn."""
+    with open(os.path.join(_resolve(directory), "manifest.json")) as f:
         return json.load(f)
 
 
@@ -70,6 +99,7 @@ def restore(directory: str, like, shardings=None) -> tuple[Any, int]:
 
     Returns (tree, step).
     """
+    directory = _resolve(directory)
     manifest = load_manifest(directory)
     data = np.load(os.path.join(directory, "arrays.npz"))
     items, treedef = _flatten(like)
@@ -94,7 +124,30 @@ def restore(directory: str, like, shardings=None) -> tuple[Any, int]:
     return tree, manifest["step"]
 
 
+def restore_tree(directory: str) -> tuple[dict, int]:
+    """Restore a checkpoint as a nested dict WITHOUT a ``like`` tree,
+    rebuilt from the manifest's ``/``-joined paths.  Needed when leaf
+    shapes aren't known up front (e.g. a gateway checkpoint whose queue
+    length varies); shapes/dtypes come from the saved arrays verbatim.
+
+    Returns (nested_dict, step).
+    """
+    directory = _resolve(directory)
+    manifest = load_manifest(directory)
+    data = np.load(os.path.join(directory, "arrays.npz"))
+    tree: dict = {}
+    for rec in manifest["leaves"]:
+        parts = rec["path"].split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = data[rec["name"]]
+    return tree, manifest["step"]
+
+
 def latest_step(directory: str) -> int | None:
+    """Step recorded in the checkpoint under ``directory`` (or its
+    ``.old`` fallback); ``None`` when no checkpoint exists."""
     try:
         return load_manifest(directory)["step"]
     except (FileNotFoundError, KeyError):

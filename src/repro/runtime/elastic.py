@@ -25,10 +25,51 @@ def best_mesh_shape(n_devices: int, model_parallel: int
 
 
 def remesh(devices=None, model_parallel: int = 1) -> Mesh:
+    """Rebuild a (data, model) mesh from the surviving ``devices``
+    (default: all visible), shrinking the TP degree if it no longer
+    divides the device count."""
     devices = devices if devices is not None else jax.devices()
     shape = best_mesh_shape(len(devices), model_parallel)
     arr = np.asarray(devices[:shape[0] * shape[1]]).reshape(shape)
     return Mesh(arr, ("data", "model"))
+
+
+def remesh_lanes(devices=None) -> Mesh:
+    """Rebuild the serving path's 1-D lane mesh
+    (:data:`repro.launch.mesh.LANE_AXIS`) from the surviving
+    ``devices`` — the device-loss twin of
+    :func:`repro.launch.mesh.make_lane_mesh`."""
+    from repro.launch.mesh import LANE_AXIS
+
+    devices = devices if devices is not None else jax.devices()
+    return Mesh(np.asarray(devices), (LANE_AXIS,))
+
+
+def lane_groups(n_lanes: int, n_devices: int) -> np.ndarray:
+    """Device id owning each lane under the 1-D lane mesh's contiguous
+    block layout (``[n_lanes]`` int64).  ``n_devices`` must divide
+    ``n_lanes`` — the same constraint the sharded engine enforces."""
+    if n_lanes % n_devices:
+        raise ValueError(f"n_lanes={n_lanes} not divisible by "
+                         f"n_devices={n_devices}")
+    return np.repeat(np.arange(n_devices), n_lanes // n_devices)
+
+
+def dead_lane_mask(n_lanes: int, n_devices: int,
+                   lost_devices) -> np.ndarray:
+    """Lane-death mask (``[n_lanes]`` bool) when the devices in
+    ``lost_devices`` die: every lane in a lost device's contiguous
+    block is dead (correlated loss, DESIGN.md §10)."""
+    return np.isin(lane_groups(n_lanes, n_devices),
+                   np.asarray(list(lost_devices), dtype=np.int64))
+
+
+def surviving_lane_capacity(n_lanes: int, n_devices: int,
+                            n_lost: int) -> int:
+    """Lane capacity after ``n_lost`` of ``n_devices`` devices die —
+    the re-rounded count the churn protocol re-admits into (no
+    re-traces: survivors keep their lane state, DESIGN.md §5/§6)."""
+    return (n_lanes // n_devices) * (n_devices - n_lost)
 
 
 def reshard_state(state, mesh: Mesh, spec_fn) -> object:

@@ -20,6 +20,9 @@ import dataclasses
 import os
 from typing import Callable
 
+import jax
+import numpy as np
+
 from repro.checkpoint import io as ckpt_io
 
 
@@ -43,6 +46,10 @@ class Supervisor:
         InjectedFailure once at global step ``fail_at`` (before the
         checkpoint of that step) to exercise the restart path."""
         step = start_step
+        # Snapshot the entry state: a crash BEFORE the first checkpoint
+        # must restart from here, not from the mutated in-flight state
+        # (which would silently diverge from the uninterrupted run).
+        self._initial = (jax.tree.map(np.asarray, state), start_step)
         failed_once = False
         restarts = 0
         while step < start_step + n_steps:
@@ -67,6 +74,15 @@ class Supervisor:
         return state, step
 
     def restore(self, like_state):
-        if not os.path.exists(self.ckpt_dir):
-            return like_state, 0
+        """Restore the latest checkpoint (``<dir>`` or its ``.old``
+        torn-write fallback); with no checkpoint yet, restart from the
+        state/step :meth:`run` entered with.  Returns (state, step)."""
+        if not os.path.exists(self.ckpt_dir) and \
+                not os.path.exists(self.ckpt_dir + ".old"):
+            initial = getattr(self, "_initial", None)
+            if initial is None:
+                raise FileNotFoundError(
+                    f"no checkpoint under {self.ckpt_dir!r} and no "
+                    f"recorded initial state to restart from")
+            return initial
         return ckpt_io.restore(self.ckpt_dir, like_state)

@@ -23,6 +23,12 @@ from repro.core.kalman import ScalarKalman
 
 @dataclasses.dataclass
 class StragglerMonitor:
+    """Per-host straggler detector on median-normalised step times: one
+    ScalarKalman per host tracks its wall-time ratio to the fleet
+    median; mu above ``max(1 + alarm_sigma * std, min_ratio)`` flags
+    the host, and ``persistent_after`` consecutive flags escalate
+    :meth:`recommendation` from "tolerate" to "reshard"."""
+
     n_hosts: int
     alarm_sigma: float = 3.0
     min_ratio: float = 1.3
@@ -48,5 +54,8 @@ class StragglerMonitor:
         return flagged
 
     def recommendation(self, host: int) -> str:
+        """Mitigation for ``host``: "reshard" (persistent HW fault —
+        drop it and re-mesh via elastic.py) once the alarm has held for
+        ``persistent_after`` consecutive steps, else "tolerate"."""
         return "reshard" if self.alarm_counts[host] >= \
             self.persistent_after else "tolerate"

@@ -214,6 +214,9 @@ class FleetAlertServer:
         self._goal_bank: WindowedGoalBank | None = None
         self.active = np.concatenate(
             [np.full(n_streams, bool(start_active)), np.zeros(pad, bool)])
+        # Quarantined lanes (device loss, persistent stragglers): never
+        # leased again until the operator clears them (DESIGN.md §10).
+        self._dead = np.zeros(cap, bool)
         self.goal_kinds = np.full(cap, goal_codes([goal])[0],
                                   dtype=np.int64)
         # Per-lane Constraints overrides (installed by admit): tenants may
@@ -245,7 +248,7 @@ class FleetAlertServer:
         by :meth:`serve_tick` whenever its ``constraints`` argument (or
         this lane's entry in it) is ``None``.
         """
-        free = np.nonzero(~self.active)[0]
+        free = np.nonzero(~self.active & ~self._dead)[0]
         if free.size == 0:
             new_cap = max(2 * self.n_streams, 1)
             if self.mesh is not None:
@@ -260,6 +263,8 @@ class FleetAlertServer:
                 self._goal_bank.grow(new_cap)
             self.active = np.concatenate(
                 [self.active, np.zeros(new_cap - lane, bool)])
+            self._dead = np.concatenate(
+                [self._dead, np.zeros(new_cap - lane, bool)])
             self.goal_kinds = np.concatenate(
                 [self.goal_kinds,
                  np.full(new_cap - lane, goal_codes([self.goal])[0],
@@ -280,6 +285,28 @@ class FleetAlertServer:
         """Release a lane; its slot is recycled by a later :meth:`admit`."""
         self.active[lane] = False
         self.lane_constraints[lane] = None
+
+    def fail_lanes(self, lanes) -> None:
+        """Quarantine ``lanes`` (device loss or a tripped persistent
+        straggler — e.g. everything a
+        :func:`repro.runtime.elastic.dead_lane_mask` marks): their
+        streams stop serving immediately and the lanes are never leased
+        by :meth:`admit` again, so capacity re-rounds to the survivors
+        without touching any other lane's state — the §5 churn
+        protocol, no re-traces.  Tenants re-admit onto surviving lanes
+        via :meth:`admit` as usual."""
+        for lane in np.atleast_1d(np.asarray(lanes, dtype=np.int64)):
+            self.active[lane] = False
+            self._dead[lane] = True
+            self.lane_constraints[lane] = None
+
+    def revive_lanes(self, lanes) -> None:
+        """Clear the quarantine on ``lanes`` (device restored after a
+        power cycle); the lanes return to the free pool for
+        :meth:`admit` to lease — state re-initialised on lease, exactly
+        like any recycled lane."""
+        for lane in np.atleast_1d(np.asarray(lanes, dtype=np.int64)):
+            self._dead[lane] = False
 
     # ------------------------------------------------------------------ #
     def _effective_accuracy_goal(self, constraints) -> np.ndarray:

@@ -672,14 +672,16 @@ class FleetSim:
                   dnn_control: bool = True, overhead: float = 0.0,
                   paper_faithful_energy: bool = True,
                   mesh=None, backend: str = "xla",
-                  scheme_name: str = "alert") -> FleetResult:
+                  scheme_name: str = "alert",
+                  faults=None) -> FleetResult:
         """Fleet-wide uniform goal/constraints (the Table-3 schemes)."""
         return self.run_streams(
             [goal] * self.n_streams, [cons] * self.n_streams,
             anytime=anytime, power_control=power_control,
             dnn_control=dnn_control, overhead=overhead,
             paper_faithful_energy=paper_faithful_energy,
-            mesh=mesh, backend=backend, scheme_name=scheme_name)
+            mesh=mesh, backend=backend, scheme_name=scheme_name,
+            faults=faults)
 
     def run_specs(self, specs: Sequence[StreamSpec],
                   **kwargs) -> FleetResult:
@@ -696,7 +698,8 @@ class FleetSim:
                     dnn_control: bool = True, overhead: float = 0.0,
                     paper_faithful_energy: bool = True,
                     mesh=None, backend: str = "xla",
-                    scheme_name: str = "alert") -> FleetResult:
+                    scheme_name: str = "alert",
+                    faults=None) -> FleetResult:
         """Advance the whole (possibly ragged, heterogeneous) fleet; one
         masked engine call per global tick.
 
@@ -718,10 +721,23 @@ class FleetSim:
         ``alert_select`` kernel with bitwise-identical picks, so whole
         trajectories (including the golden traces) reproduce exactly
         (docs/KERNELS.md).
+
+        ``faults`` (a :class:`~repro.traffic.faults.FaultSchedule` over
+        ``n_streams`` lanes — this sim is lane-per-stream) injects
+        volatility at each tick instant: the slow-down row multiplies
+        onto the environment's true scale, and a lane inside a
+        device-loss window drops its in-flight input (recorded as a
+        miss: the request was on the dead device) and is masked out of
+        selection and feedback until the device restores (DESIGN.md
+        §10).
         """
         table = self.table
         assert len(goals) == self.n_streams
         assert len(constraints) == self.n_streams
+        if faults is not None and faults.n_lanes != self.n_streams:
+            raise ValueError(
+                f"FaultSchedule covers {faults.n_lanes} lanes but the "
+                f"fleet has {self.n_streams} streams")
         for g, c in zip(goals, constraints):
             if g is Goal.MINIMIZE_ENERGY and c.accuracy_goal is None:
                 raise ValueError(f"{g} stream needs accuracy_goal")
@@ -797,6 +813,18 @@ class FleetSim:
 
         for n in range(t_n):
             act = act_grid[:, n]                                    # [S]
+            lost = None
+            if faults is not None:
+                dead = faults.dead_at(float(n))                     # [S]
+                if pad:
+                    dead = np.concatenate([dead, np.zeros(pad, bool)])
+                lost = act & dead
+                if lost.any():
+                    # The in-flight input died with its device: a miss
+                    # with no completion (zero accuracy/energy) —
+                    # Zygarde's lost-work semantics.
+                    out.missed[np.nonzero(lost[:s_n])[0], n] = True
+                act = act & ~dead
             dvec = dmat[:, n]
             q_goal_eff = q0 if goal_bank is None else \
                 goal_bank.current_goal()
@@ -814,6 +842,11 @@ class FleetSim:
                 else j_pick
             i_glob = idx_arr[i_local]
             scale = scale_mat[:, n]
+            if faults is not None:
+                fmul = faults.slow_at(float(n))
+                if pad:
+                    fmul = np.concatenate([fmul, np.ones(pad)])
+                scale = scale * fmul
 
             # --- vectorised delivery + feedback pair (the shared tick
             # kernel: staircase Eq. 10 for real, anytime co-design — a

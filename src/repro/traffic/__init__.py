@@ -19,7 +19,11 @@ serving system:
   host loop's rounds/sec at fleet scale);
 * :mod:`repro.traffic.loadsweep` — the offered-load sweep harness
   (goodput / p99 / energy / miss-rate vs load, alert vs hindsight
-  static) recorded in ``BENCH_controller.json``.
+  static) recorded in ``BENCH_controller.json``;
+* :mod:`repro.traffic.faults` — seeded, replayable fault injection
+  (lane stragglers, correlated device loss, DVFS drift, brownouts)
+  plus Kalman-bank straggler detection, composing with both gateways
+  bitwise-identically (DESIGN.md §10).
 """
 
 from repro.traffic.workloads import (ArrivalProcess, DiurnalProcess,
@@ -27,6 +31,10 @@ from repro.traffic.workloads import (ArrivalProcess, DiurnalProcess,
                                      PoissonProcess, Session, TenantSpec,
                                      TrafficRequest, build_sessions,
                                      generate_requests)
+from repro.traffic.faults import (FAULT_KINDS, Brownout, DeviceLoss,
+                                  DVFSDrift, FaultSchedule,
+                                  KalmanLaneDetector, LaneStraggler,
+                                  scenario)
 from repro.traffic.gateway import GatewayResult, SessionGateway
 from repro.traffic.loadsweep import hindsight_static_config, sweep_loads
 from repro.traffic.megatick import MegatickGateway
@@ -36,5 +44,7 @@ __all__ = [
     "FlashCrowdProcess", "TenantSpec", "Session", "TrafficRequest",
     "build_sessions", "generate_requests", "SessionGateway",
     "GatewayResult", "MegatickGateway", "hindsight_static_config",
-    "sweep_loads",
+    "sweep_loads", "FaultSchedule", "LaneStraggler", "DeviceLoss",
+    "DVFSDrift", "Brownout", "KalmanLaneDetector", "scenario",
+    "FAULT_KINDS",
 ]

@@ -35,15 +35,18 @@ shifts.  :class:`SessionGateway` serves that regime with ONE
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Sequence
 
 import numpy as np
 
+from repro.checkpoint import io as ckpt_io
 from repro.core.batched import (BatchedAlertEngine, WindowedGoalBank,
                                 goal_codes)
 from repro.core.kalman import (IdlePowerFilterBank, SlowdownFilterBank,
                                observe_fleet)
 from repro.core.profiles import ProfileTable
+from repro.runtime.ft import InjectedFailure
 from repro.serving.batcher import DeadlineBatcher
 from repro.serving.sim import TraceResult, deliver_tick
 from repro.traffic.workloads import (Session, TrafficRequest,
@@ -53,6 +56,29 @@ from repro.traffic.workloads import (Session, TrafficRequest,
 SERVED = 0
 REJECTED_INFEASIBLE = 1     # EDF fail-fast: slack below any feasible run
 REJECTED_BACKPRESSURE = 2   # bounded queue was full at arrival
+
+# GatewayResult arrays a checkpoint must carry (the loop mutates these;
+# sid/index/arrival are rebuilt from the workload at resume).
+_CKPT_OUT_FIELDS = ("status", "start", "latency", "sojourn", "missed",
+                    "accuracy", "energy", "model_index", "power_index")
+
+
+@dataclasses.dataclass
+class _RunState:
+    """Everything one :meth:`SessionGateway.run` mutates outside the
+    gateway's lane pool and banks — the resumable unit a checkpoint
+    captures (DESIGN.md §10)."""
+
+    requests: list
+    sess: dict
+    tick: float
+    queue: DeadlineBatcher
+    out: "GatewayResult"
+    ri: int = 0                 # next unsubmitted request index
+    round_k: int = 0            # round clock
+    n_rounds: int = 0           # rounds that served a batch
+    last_completion: float = 0.0
+    iters: int = 0              # loop iterations (checkpoint cadence)
 
 
 @dataclasses.dataclass
@@ -176,7 +202,8 @@ class SessionGateway:
                  tick: float | None = None,
                  max_queue: int | None = None,
                  min_feasible_latency: float | None = None,
-                 accuracy_window: int = 10, backend: str = "xla"):
+                 accuracy_window: int = 10, backend: str = "xla",
+                 mesh=None):
         self.table = table
         self.n_lanes = int(n_lanes)
         self.phi_true = float(phi_true)
@@ -185,10 +212,13 @@ class SessionGateway:
         self.min_feasible_latency = float(table.latency.min()) \
             if min_feasible_latency is None else float(min_feasible_latency)
         self.accuracy_window = int(accuracy_window)
+        self.mesh = mesh
         self.engine = BatchedAlertEngine(table, None, overhead=overhead,
-                                         backend=backend)
-        self.slow = SlowdownFilterBank(self.n_lanes)
-        self.idle = IdlePowerFilterBank(self.n_lanes)
+                                         backend=backend, mesh=mesh)
+        self.slow = SlowdownFilterBank(self.n_lanes, mesh=mesh)
+        self.idle = IdlePowerFilterBank(self.n_lanes, mesh=mesh)
+        # The goal window stays host-resident even under a mesh (bitwise
+        # window sums, mirroring FleetSim.run_streams).
         self.goal_bank = WindowedGoalBank(
             np.zeros(self.n_lanes), self.n_lanes, accuracy_window)
         self._st = table.staircase_tensors()
@@ -211,11 +241,34 @@ class SessionGateway:
         self._goal_kinds = np.zeros(self.n_lanes, dtype=np.int64)
         self._last_used = np.zeros(self.n_lanes, dtype=np.int64)
         self._busy_until = np.zeros(self.n_lanes)
+        self._dead = np.zeros(self.n_lanes, dtype=bool)
         self.pages_in = self.pages_out = 0
         all_lanes = np.arange(self.n_lanes)
         self.slow.reset_lanes(all_lanes)
         self.idle.reset_lanes(all_lanes)
         self.goal_bank.reset_lanes(all_lanes, goal=np.zeros(self.n_lanes))
+
+    def _evict_lanes(self, ev_lanes: Sequence[int]) -> None:
+        """Page the residents of ``ev_lanes`` out to the host store (one
+        batched ``export_lanes`` per bank) and free the lanes.  Shared
+        by LRU eviction and device-loss quarantine — a dead lane's
+        session state survives the device and can be re-admitted on a
+        surviving lane (DESIGN.md §10)."""
+        if not len(ev_lanes):
+            return
+        slow_s = self.slow.export_lanes(ev_lanes)
+        idle_s = self.idle.export_lanes(ev_lanes)
+        goal_s = self.goal_bank.export_lanes(ev_lanes)
+        for k, ln in enumerate(ev_lanes):
+            old = int(self._resident[ln])
+            self._store[old] = {
+                "slow": {n: v[k:k + 1] for n, v in slow_s.items()},
+                "idle": {n: v[k:k + 1] for n, v in idle_s.items()},
+                "goal": {n: v[k:k + 1] for n, v in goal_s.items()},
+            }
+            del self._lane_of[old]
+            self._resident[ln] = -1
+            self.pages_out += 1
 
     def _page_in(self, sids: Sequence[int],
                  sessions: dict[int, Session], round_k: int,
@@ -241,7 +294,7 @@ class SessionGateway:
             if lane < 0:
                 missing.append(pos)
         if missing:
-            idle = self._busy_until <= now
+            idle = (self._busy_until <= now) & ~self._dead
             free = [int(x) for x in
                     np.nonzero((self._resident < 0) & idle)[0]]
             n_evict = len(missing) - len(free)
@@ -255,19 +308,7 @@ class SessionGateway:
             else:
                 ev_lanes = []
             if ev_lanes:
-                slow_s = self.slow.export_lanes(ev_lanes)
-                idle_s = self.idle.export_lanes(ev_lanes)
-                goal_s = self.goal_bank.export_lanes(ev_lanes)
-                for k, ln in enumerate(ev_lanes):
-                    old = int(self._resident[ln])
-                    self._store[old] = {
-                        "slow": {n: v[k:k + 1] for n, v in slow_s.items()},
-                        "idle": {n: v[k:k + 1] for n, v in idle_s.items()},
-                        "goal": {n: v[k:k + 1] for n, v in goal_s.items()},
-                    }
-                    del self._lane_of[old]
-                    self._resident[ln] = -1
-                    self.pages_out += 1
+                self._evict_lanes(ev_lanes)
                 free += ev_lanes
             if len(free) < len(missing):
                 # Eviction could not produce enough idle lanes (every
@@ -337,22 +378,20 @@ class SessionGateway:
     # -------------------------------------------------------------- #
     # the event loop                                                  #
     # -------------------------------------------------------------- #
-    def run(self, sessions: Sequence[Session],
-            requests: list[TrafficRequest] | None = None, *,
-            policy: str = "alert",
-            static_config: tuple[int, int] | None = None) -> GatewayResult:
-        """Serve one workload to completion; returns per-request
-        dispositions and outcomes.
-
-        ``requests`` defaults to ``generate_requests(sessions)``.
-        ``policy="static"`` runs the fixed ``static_config`` (model,
-        power) through the same clock/queue/delivery path with no
-        controller state (used for the hindsight-static baseline).
-        """
+    def _init_run(self, sessions: Sequence[Session],
+                  requests: list[TrafficRequest] | None, *,
+                  policy: str, static_config, faults) -> "_RunState":
+        """Validate one run's inputs and build its fresh, resumable
+        loop state (requests sorted + row-assigned, result shell, round
+        clock, empty queue, reset lane pool)."""
         if policy not in ("alert", "static"):
             raise ValueError(policy)
         if policy == "static" and static_config is None:
             raise ValueError("policy='static' needs static_config=(i, j)")
+        if faults is not None and faults.n_lanes != self.n_lanes:
+            raise ValueError(
+                f"FaultSchedule covers {faults.n_lanes} lanes but the "
+                f"gateway has {self.n_lanes}")
         sess = {s.sid: s for s in sessions}
         if requests is None:
             requests = generate_requests(sessions)
@@ -383,31 +422,129 @@ class SessionGateway:
             missed=np.zeros(n, bool), accuracy=np.zeros(n),
             energy=np.zeros(n), model_index=np.zeros(n, dtype=np.int64),
             power_index=np.zeros(n, dtype=np.int64))
-        if n == 0:
-            return out
         tick = self.tick if self.tick is not None else \
-            max(r.rel_deadline for r in requests)
+            (max(r.rel_deadline for r in requests) if n else 1.0)
         self._reset_lane_pool()
         queue = DeadlineBatcher(batch_size=self.n_lanes,
                                 min_feasible_latency=
                                 self.min_feasible_latency,
                                 max_queue=self.max_queue)
+        return _RunState(requests=requests, sess=sess, tick=float(tick),
+                         queue=queue, out=out)
+
+    def run(self, sessions: Sequence[Session],
+            requests: list[TrafficRequest] | None = None, *,
+            policy: str = "alert",
+            static_config: tuple[int, int] | None = None,
+            faults=None, detector=None,
+            checkpoint_dir: str | None = None,
+            checkpoint_every: int = 8,
+            kill_at_round: int | None = None) -> GatewayResult:
+        """Serve one workload to completion; returns per-request
+        dispositions and outcomes.
+
+        ``requests`` defaults to ``generate_requests(sessions)``.
+        ``policy="static"`` runs the fixed ``static_config`` (model,
+        power) through the same clock/queue/delivery path with no
+        controller state (used for the hindsight-static baseline).
+
+        Fault subsystem hooks (DESIGN.md §10):
+
+        * ``faults`` — a :class:`~repro.traffic.faults.FaultSchedule`
+          evaluated at every round instant: its slow-down multiplier
+          composes onto the environment's true scale, and its
+          lane-death mask quarantines lanes (residents paged out to the
+          host store, capacity shrinks, survivors keep their state —
+          the §5 churn protocol, no re-traces).
+        * ``detector`` — a
+          :class:`~repro.traffic.faults.KalmanLaneDetector` observing
+          the slow-down bank's (mu, sigma) each served round (pure
+          observer; never perturbs selection).
+        * ``checkpoint_dir`` — atomically snapshot the full gateway +
+          bank + queue state every ``checkpoint_every`` loop iterations
+          (:mod:`repro.checkpoint.io`); :meth:`resume` continues a
+          killed run bit-exactly.
+        * ``kill_at_round`` — raise
+          :class:`~repro.runtime.ft.InjectedFailure` at that loop
+          iteration (before it executes), for kill/resume tests.
+        """
+        rs = self._init_run(sessions, requests, policy=policy,
+                            static_config=static_config, faults=faults)
+        if rs.out.offered == 0:
+            return rs.out
+        return self._drive(rs, policy, static_config, faults, detector,
+                           checkpoint_dir, checkpoint_every,
+                           kill_at_round)
+
+    def resume(self, sessions: Sequence[Session],
+               requests: list[TrafficRequest] | None = None, *,
+               checkpoint_dir: str,
+               policy: str = "alert",
+               static_config: tuple[int, int] | None = None,
+               faults=None, detector=None,
+               checkpoint_every: int = 8,
+               kill_at_round: int | None = None) -> GatewayResult:
+        """Resume a killed :meth:`run` from its latest checkpoint and
+        drive it to completion — bit-exactly: the resumed trajectory is
+        indistinguishable from the uninterrupted one.
+
+        The caller must offer the SAME workload (sessions/requests are
+        regenerated deterministically from their seeds; the checkpoint
+        stores loop state, not the workload).  A gateway built over a
+        different lane mesh may resume the same checkpoint — bank state
+        is resharded onto the new mesh via
+        :func:`repro.runtime.elastic.reshard_state` (elastic restore).
+        """
+        rs = self._init_run(sessions, requests, policy=policy,
+                            static_config=static_config, faults=faults)
+        self._load_checkpoint(rs, checkpoint_dir)
+        return self._drive(rs, policy, static_config, faults, detector,
+                           checkpoint_dir, checkpoint_every,
+                           kill_at_round)
+
+    def _drive(self, rs: "_RunState", policy: str, static_config,
+               faults, detector, checkpoint_dir: str | None,
+               checkpoint_every: int,
+               kill_at_round: int | None) -> GatewayResult:
+        """The round loop, resumable at any iteration boundary: every
+        mutation lives in ``rs`` / the lane pool / the banks, all of
+        which the checkpoint captures."""
+        requests, sess, tick, queue, out = \
+            rs.requests, rs.sess, rs.tick, rs.queue, rs.out
+        n = len(requests)
         lanes_arange = np.arange(self.n_lanes)
-        ri = 0
-        round_k = 0
-        n_rounds = 0
-        last_completion = 0.0
-        while ri < n or len(queue):
+        while rs.ri < n or len(queue):
+            if kill_at_round is not None and rs.iters == kill_at_round:
+                raise InjectedFailure(
+                    f"injected kill at gateway iteration {rs.iters}")
             if not len(queue):
-                round_k = max(round_k,
-                              self._round_of(requests[ri].arrival, tick))
-            now = round_k * tick
+                rs.round_k = max(
+                    rs.round_k,
+                    self._round_of(requests[rs.ri].arrival, tick))
+            now = rs.round_k * tick
+            # --- fault schedule at the round instant: pure numpy f64,
+            # shared verbatim with the megatick planner so both paths
+            # see bit-identical perturbations ---
+            fmul = None
+            if faults is not None:
+                dead_now = faults.dead_at(now)
+                newly_dead = dead_now & ~self._dead
+                if newly_dead.any():
+                    # Device loss quarantines its lanes: residents page
+                    # out to the host store (their Kalman/goal state
+                    # survives the device), capacity shrinks to the
+                    # survivors — the §5 churn protocol, no re-traces.
+                    ev = [int(ln) for ln in np.nonzero(newly_dead)[0]
+                          if self._resident[ln] >= 0]
+                    self._evict_lanes(ev)
+                self._dead = dead_now
+                fmul = faults.slow_at(now)
             # --- arrivals due by this round (backpressure at submit) ---
-            while ri < n and requests[ri].arrival <= now:
-                req = requests[ri]
+            while rs.ri < n and requests[rs.ri].arrival <= now:
+                req = requests[rs.ri]
                 if not queue.submit(req):
                     out.status[req._row] = REJECTED_BACKPRESSURE
-                ri += 1
+                rs.ri += 1
             # --- EDF pop onto the lanes that are free this round, at
             # most one request per session (a session is sequential:
             # whether queued behind itself or mid-service on a busy
@@ -416,7 +553,8 @@ class SessionGateway:
             # deferral budget waits for the next round instead of
             # churning the whole backlog through the heap every round.
             n_rej = len(queue.rejected)
-            avail = int((self._busy_until <= now).sum())
+            avail = int(((self._busy_until <= now)
+                         & ~self._dead).sum())
             batch: list[TrafficRequest] = []
             seen: set[int] = set()
             deferred: list[TrafficRequest] = []
@@ -442,21 +580,160 @@ class SessionGateway:
                 out.status[req._row] = REJECTED_INFEASIBLE
                 out.start[req._row] = now
             if batch:
-                last_completion = max(last_completion, self._serve_round(
-                    batch, sess, now, round_k, policy, static_config,
-                    lanes_arange, out))
-                n_rounds += 1
-            round_k += 1
-        out.horizon = max(last_completion,
+                rs.last_completion = max(
+                    rs.last_completion, self._serve_round(
+                        batch, sess, now, rs.round_k, policy,
+                        static_config, lanes_arange, out, fmul,
+                        detector))
+                rs.n_rounds += 1
+            rs.round_k += 1
+            rs.iters += 1
+            if checkpoint_dir is not None and \
+                    rs.iters % max(checkpoint_every, 1) == 0:
+                self._save_checkpoint(rs, checkpoint_dir)
+        out.horizon = max(rs.last_completion,
                           float(out.arrival[-1]) if n else 0.0)
-        out.n_rounds = n_rounds
+        out.n_rounds = rs.n_rounds
         out.pages_in, out.pages_out = self.pages_in, self.pages_out
         out.n_compiles = self.engine.n_compiles()
         return out
 
+    # -------------------------------------------------------------- #
+    # checkpoint / resume                                             #
+    # -------------------------------------------------------------- #
+    def _save_checkpoint(self, rs: "_RunState", directory: str) -> None:
+        """Atomic snapshot of everything :meth:`_drive` mutates: loop
+        scalars, the EDF heap (internal list order + seq counter —
+        restored pops are bitwise), the lane pool, full-bank filter/goal
+        state, the paged-session store, and the partial result arrays.
+        Written via :func:`repro.checkpoint.io.save` (torn-write safe)."""
+        q = rs.queue
+        # Peek the seq counter without perturbing it: consume one value
+        # and replace the counter with a fresh count from that value.
+        n0 = next(q._counter)
+        q._counter = itertools.count(n0)
+        all_lanes = np.arange(self.n_lanes)
+        store_sids = np.asarray(sorted(self._store), dtype=np.int64)
+        store: dict = {"sids": store_sids}
+        if store_sids.size:
+            s0 = self._store[int(store_sids[0])]
+            for part in ("slow", "idle", "goal"):
+                for name in s0[part]:
+                    store[f"{part}.{name}"] = np.concatenate(
+                        [self._store[int(s)][part][name]
+                         for s in store_sids])
+        tree = {
+            "meta": {
+                "ri": np.int64(rs.ri),
+                "round_k": np.int64(rs.round_k),
+                "n_rounds": np.int64(rs.n_rounds),
+                "iters": np.int64(rs.iters),
+                "last_completion": np.float64(rs.last_completion),
+                "pages_in": np.int64(self.pages_in),
+                "pages_out": np.int64(self.pages_out),
+                "next_seq": np.int64(n0),
+                "tick": np.float64(rs.tick),
+                "n_requests": np.int64(len(rs.requests)),
+            },
+            "queue": {
+                "seq": np.asarray([s for _, s, _ in q._heap],
+                                  dtype=np.int64),
+                "row": np.asarray([r._row for _, _, r in q._heap],
+                                  dtype=np.int64),
+            },
+            "lanes": {
+                "resident": self._resident.copy(),
+                "goal_kinds": self._goal_kinds.copy(),
+                "last_used": self._last_used.copy(),
+                "busy_until": self._busy_until.copy(),
+                "dead": self._dead.copy(),
+            },
+            "slow": {k: np.asarray(v) for k, v in
+                     self.slow.export_lanes(all_lanes).items()},
+            "idle": {k: np.asarray(v) for k, v in
+                     self.idle.export_lanes(all_lanes).items()},
+            "goal": {k: np.asarray(v) for k, v in
+                     self.goal_bank.export_lanes(all_lanes).items()},
+            "store": store,
+            "out": {f: getattr(rs.out, f).copy() for f in
+                    _CKPT_OUT_FIELDS},
+        }
+        ckpt_io.save(directory, tree, step=rs.iters)
+
+    def _load_checkpoint(self, rs: "_RunState", directory: str) -> None:
+        """Overwrite the fresh ``rs`` + lane pool + banks with the
+        snapshot under ``directory``.  When the gateway carries a lane
+        mesh the restored bank state is resharded onto it first
+        (:func:`repro.runtime.elastic.reshard_state`) — the
+        mesh-shape-change restore path."""
+        tree, _step = ckpt_io.restore_tree(directory)
+        meta = tree["meta"]
+        if int(meta["n_requests"]) != len(rs.requests):
+            raise ValueError(
+                f"checkpoint was taken over {int(meta['n_requests'])} "
+                f"requests but this run offers {len(rs.requests)}: "
+                "resume needs the identical workload")
+        if float(meta["tick"]) != rs.tick:
+            raise ValueError(
+                f"checkpoint tick {float(meta['tick'])} != run tick "
+                f"{rs.tick}: resume needs the identical round clock")
+        rs.ri = int(meta["ri"])
+        rs.round_k = int(meta["round_k"])
+        rs.n_rounds = int(meta["n_rounds"])
+        rs.iters = int(meta["iters"])
+        rs.last_completion = float(meta["last_completion"])
+        self.pages_in = int(meta["pages_in"])
+        self.pages_out = int(meta["pages_out"])
+        q = rs.queue
+        q._counter = itertools.count(int(meta["next_seq"]))
+        heap = []
+        for s, rw in zip(tree["queue"]["seq"].tolist(),
+                         tree["queue"]["row"].tolist()):
+            req = rs.requests[int(rw)]
+            req._seq = int(s)
+            heap.append((req.deadline, int(s), req))
+        # Saved in internal list order, so the heap invariant is
+        # preserved verbatim — restored pops are bitwise-identical.
+        q._heap = heap
+        ln = tree["lanes"]
+        self._resident = ln["resident"].astype(np.int64)
+        self._goal_kinds = ln["goal_kinds"].astype(np.int64)
+        self._last_used = ln["last_used"].astype(np.int64)
+        self._busy_until = ln["busy_until"].astype(np.float64)
+        self._dead = ln["dead"].astype(bool)
+        self._lane_of = {int(s): int(l)
+                         for l, s in enumerate(self._resident) if s >= 0}
+        all_lanes = np.arange(self.n_lanes)
+        slow_state, idle_state = tree["slow"], tree["idle"]
+        if self.mesh is not None:
+            from repro.launch.mesh import lane_pspec
+            from repro.runtime.elastic import reshard_state
+
+            spec = lane_pspec(self.mesh)
+            slow_state = reshard_state(slow_state, self.mesh,
+                                       lambda p, leaf: spec)
+            idle_state = reshard_state(idle_state, self.mesh,
+                                       lambda p, leaf: spec)
+        self.slow.import_lanes(all_lanes, slow_state)
+        self.idle.import_lanes(all_lanes, idle_state)
+        self.goal_bank.import_lanes(all_lanes, tree["goal"])
+        self._store = {}
+        sids = tree["store"]["sids"].tolist()
+        for k, sid in enumerate(sids):
+            entry: dict = {"slow": {}, "idle": {}, "goal": {}}
+            for key, arr in tree["store"].items():
+                if key == "sids":
+                    continue
+                part, name = key.split(".", 1)
+                entry[part][name] = arr[k:k + 1]
+            self._store[int(sid)] = entry
+        for f in _CKPT_OUT_FIELDS:
+            getattr(rs.out, f)[:] = tree["out"][f]
+
     def _serve_round(self, batch, sess, now: float, round_k: int,
                      policy: str, static_config, lanes_arange,
-                     out: GatewayResult) -> float:
+                     out: GatewayResult, fmul=None,
+                     detector=None) -> float:
         """One synchronous round: page the batch's sessions in, score all
         lanes with one masked engine call (or the fixed static config),
         deliver through the shared tick kernel, absorb feedback.  Returns
@@ -476,6 +753,12 @@ class SessionGateway:
             e_goal[lane] = (s.constraints.energy_goal or 0.0) * \
                 s.trace.deadline_scale[req.index]
             scale[lane] = s.trace.xi[req.index] * s.trace.lam[req.index]
+        if fmul is not None:
+            # Injected slow-down composes onto the environment's true
+            # scale AFTER the per-lane fill, as (xi*lam) * f — the same
+            # multiplication order the megatick planner uses, so both
+            # paths see bit-identical effective scales.
+            scale = scale * fmul
         if policy == "alert":
             b = self.engine.select(
                 self.slow.mu, self.slow.sigma, self.idle.phi, dvec,
@@ -499,6 +782,12 @@ class SessionGateway:
                                                             j_pick],
                           mask=act)
             self.goal_bank.record(d.accuracy, mask=act)
+            if detector is not None:
+                # Detection reads the Eq.7 posterior AFTER the round's
+                # update — ALERT's own estimate, not an oracle flag.
+                # Pure observer: selection above never sees it.
+                detector.observe(np.asarray(self.slow.mu),
+                                 np.asarray(self.slow.sigma), act, now)
         last = now
         for req, lane in zip(batch, lanes):
             rid = req._row

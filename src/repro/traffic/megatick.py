@@ -91,8 +91,9 @@ class _Plan:
     rel: np.ndarray         # [R, L] f64 nominal relative deadline
     arr: np.ndarray         # [R, L] f64 arrival instant
     e_goal: np.ndarray      # [R, L] f64 effective energy goal
-    scale: np.ndarray       # [R, L] f64 true latency scale xi * lambda
+    scale: np.ndarray       # [R, L] f64 effective latency scale
     gk: np.ndarray          # [R, L] int64 goal codes
+    dead: np.ndarray        # [R, L] bool lane-death mask (faults)
     now: np.ndarray         # [R] f64 round instants k * tick
 
 
@@ -155,6 +156,7 @@ class MegatickGateway:
         self._lane_arr = np.full(max(n_sessions, 1), -1, dtype=np.int64)
         self._stored_arr = np.zeros(max(n_sessions, 1), dtype=bool)
         self._last_used = np.zeros(self.n_lanes, dtype=np.int64)
+        self._dead = np.zeros(self.n_lanes, dtype=bool)
         self.pages_in = self.pages_out = 0
 
     def _page_in_meta(self, sids: np.ndarray,
@@ -179,10 +181,10 @@ class MegatickGateway:
         lanes = self._lane_arr[sids]
         miss = np.nonzero(lanes < 0)[0]
         if miss.size:
-            free = np.nonzero(self._resident < 0)[0]
+            free = np.nonzero((self._resident < 0) & ~self._dead)[0]
             n_evict = miss.size - free.size
             if n_evict > 0:
-                mask = self._resident >= 0
+                mask = (self._resident >= 0) & ~self._dead
                 mask[mask] = ~np.isin(self._resident[mask], sids)
                 cand = np.nonzero(mask)[0]
                 order = np.argsort(self._last_used[cand], kind="stable")
@@ -213,7 +215,7 @@ class MegatickGateway:
 
     def _plan(self, sessions: Sequence[Session],
               requests: list[TrafficRequest] | None,
-              sid_index: dict[int, int]) -> _Plan:
+              sid_index: dict[int, int], faults=None) -> _Plan:
         """Replay the host loop's clock and admission up front.
 
         Runs the EXACT control flow of the fixed
@@ -223,6 +225,13 @@ class MegatickGateway:
         (via :meth:`DeadlineBatcher.requeue`), LRU paging bookkeeping —
         under the regime contract (every lane idle at every boundary),
         and emits the dense round schedule the scan consumes.
+
+        ``faults`` replays the host loop's fault protocol at the same
+        round instants: death transitions quarantine lanes (residents
+        marked stored, capacity shrinks), and each scheduled round
+        records the schedule's numpy-f64 slow-down row — multiplied
+        onto the ``[R, L]`` scale grid in the host's exact
+        ``(xi*lam) * f`` order, so the scan sees bit-identical inputs.
         """
         sess = {s.sid: s for s in sessions}
         if requests is None:
@@ -248,7 +257,7 @@ class MegatickGateway:
             energy=np.zeros(n), model_index=np.zeros(n, dtype=np.int64),
             power_index=np.zeros(n, dtype=np.int64))
         if n == 0:
-            return _Plan(out, 0, *(np.zeros((0, self.n_lanes)),) * 8,
+            return _Plan(out, 0, *(np.zeros((0, self.n_lanes)),) * 9,
                          np.zeros(0))
         tick = self.tick if self.tick is not None else \
             max(r.rel_deadline for r in requests)
@@ -283,6 +292,8 @@ class MegatickGateway:
         f_eg: list[float] = []
         f_sc: list[float] = []
         f_gk: list[int] = []
+        fault_mul: list[np.ndarray] = []    # [L] per scheduled round
+        fault_dead: list[np.ndarray] = []   # [L] per scheduled round
         ri = 0
         round_k = 0
         while ri < n or len(queue):
@@ -290,20 +301,39 @@ class MegatickGateway:
                 round_k = max(round_k, SessionGateway._round_of(
                     requests[ri].arrival, tick))
             now = round_k * tick
+            if faults is not None:
+                # The host loop's death-transition protocol at the same
+                # instant: newly dead lanes page their residents to the
+                # (virtual) store and leave the pool until restored.
+                dead_now = faults.dead_at(now)
+                newly_dead = dead_now & ~self._dead
+                if newly_dead.any():
+                    ev = np.nonzero(newly_dead
+                                    & (self._resident >= 0))[0]
+                    if ev.size:
+                        olds = self._resident[ev]
+                        self._stored_arr[olds] = True
+                        self._lane_arr[olds] = -1
+                        self._resident[ev] = -1
+                        self.pages_out += int(ev.size)
+                self._dead = dead_now
             while ri < n and requests[ri].arrival <= now:
                 req = requests[ri]
                 if not queue.submit(req):
                     out.status[req._row] = REJECTED_BACKPRESSURE
                 ri += 1
             n_rej = len(queue.rejected)
-            # avail == n_lanes and no busy-lane deferral: the regime
-            # contract makes every lane idle at every round boundary
-            # (run_t <= dvec <= rel_deadline <= tick).
+            # avail == surviving lanes and no busy-lane deferral: the
+            # regime contract makes every lane idle at every round
+            # boundary (run_t <= dvec <= rel_deadline <= tick), so the
+            # host's `(busy_until <= now) & ~dead` count reduces to the
+            # live-lane count.
+            avail = self.n_lanes - int(self._dead.sum())
             batch: list[TrafficRequest] = []
             seen: set[int] = set()
             deferred: list[TrafficRequest] = []
             defer_budget = 4 * self.n_lanes
-            while len(batch) < self.n_lanes and \
+            while len(batch) < avail and \
                     len(deferred) <= defer_budget:
                 req = queue.pop_one(now)
                 if req is None:
@@ -324,6 +354,9 @@ class MegatickGateway:
                     np.asarray(dense, dtype=np.int64), round_k)
                 k = len(now_l)
                 now_l.append(now)
+                if faults is not None:
+                    fault_mul.append(faults.slow_at(now))
+                    fault_dead.append(self._dead.copy())
                 for req, lane, dk in zip(batch, lanes, dense):
                     s = sess[req.sid]
                     f_round.append(k)
@@ -364,13 +397,19 @@ class MegatickGateway:
         e_goal[kk, lv] = f_eg
         scale[kk, lv] = f_sc
         gk[kk, lv] = f_gk
+        dead = np.zeros((r_tot, ln), bool)
+        if faults is not None and n_active:
+            # The same elementwise f64 multiply the host applies after
+            # its per-lane fill: (xi*lam) * f, bit for bit.
+            scale[:n_active] = scale[:n_active] * np.stack(fault_mul)
+            dead[:n_active] = np.stack(fault_dead)
         # Each row's disposition is unique (served XOR rejected XOR
         # shed), so the batched assignment reproduces the host loop's
         # in-round writes exactly.
         out.status[rw] = SERVED
         out.start[rw] = now_v[kk]
         return _Plan(out, n_active, act, sid, row, rel, arr, e_goal,
-                     scale, gk, now_v)
+                     scale, gk, dead, now_v)
 
     # -------------------------------------------------------------- #
     # device scan                                                     #
@@ -407,7 +446,12 @@ class MegatickGateway:
             def body_static(fz, x):
                 """Deliver-only round: fixed config, no controller
                 state (the hindsight-static baseline)."""
-                act, sidv, gkv, relv, arrv, egl, scl, now = x
+                act, sidv, gkv, relv, arrv, egl, scl, deadv, now = x
+                # Lane-death mask carried through the scan: the planner
+                # never schedules onto a dead lane, so this is a no-op
+                # by construction — kept as in-scan hardening (ROADMAP
+                # item 1c) so a planner bug masks instead of serving.
+                act = act & ~deadv
                 dvec = jnp.where(act, relv - (now - arrv), 1.0)
                 i = jnp.full((ln,), i_fix, jnp.int64)
                 j = jnp.full((ln,), j_fix, jnp.int64)
@@ -442,7 +486,11 @@ class MegatickGateway:
             one past the state buffers, so gathers clamp to a sanitised
             row and scatters drop — no masking pass anywhere."""
             mu, sigma, gain, qn, phv, var, buf, pos, count = carry
-            act, sidv, gkv, relv, arrv, egl, scl, now = x
+            act, sidv, gkv, relv, arrv, egl, scl, deadv, now = x
+            # Lane-death mask in the carry path (ROADMAP item 1c): the
+            # planner never schedules a dead lane, so this only hardens
+            # the scan against a planner/schedule mismatch.
+            act = act & ~deadv
             mu_l, sd_l, ph_l = mu[sidv], sigma[sidv], phv[sidv]
             g_l, q_l, v_l = gain[sidv], qn[sidv], var[sidv]
             dvec = jnp.where(act, relv - (now - arrv), 1.0)
@@ -518,21 +566,33 @@ class MegatickGateway:
     def run(self, sessions: Sequence[Session],
             requests: list[TrafficRequest] | None = None, *,
             policy: str = "alert",
-            static_config: tuple[int, int] | None = None) -> GatewayResult:
+            static_config: tuple[int, int] | None = None,
+            faults=None) -> GatewayResult:
         """Serve one workload to completion — the
         :meth:`SessionGateway.run` contract, executed as planner +
         chunked device scan.  Raises when the effective tick is below
         the workload's largest relative deadline (the coarse-tick
-        regime contract; see the module docstring)."""
+        regime contract; see the module docstring).
+
+        ``faults`` (a :class:`~repro.traffic.faults.FaultSchedule`)
+        replays the host gateway's fault protocol exactly: the planner
+        evaluates the schedule at identical round instants and the scan
+        carries the lane-death mask, so the result stays
+        bitwise-identical to ``SessionGateway.run(..., faults=...)``
+        (``tests/test_faults.py`` pins the whole fault matrix)."""
         if policy not in ("alert", "static"):
             raise ValueError(policy)
         if policy == "static" and static_config is None:
             raise ValueError("policy='static' needs static_config=(i, j)")
+        if faults is not None and faults.n_lanes != self.n_lanes:
+            raise ValueError(
+                f"FaultSchedule covers {faults.n_lanes} lanes but the "
+                f"gateway has {self.n_lanes}")
         from jax.experimental import enable_x64
 
         t0 = time.perf_counter()
         sid_index = {s.sid: k for k, s in enumerate(sessions)}
-        plan = self._plan(sessions, requests, sid_index)
+        plan = self._plan(sessions, requests, sid_index, faults)
         self.last_plan_s = time.perf_counter() - t0
         t0 = time.perf_counter()
         out = plan.out
@@ -546,7 +606,8 @@ class MegatickGateway:
                     xs = (plan.act[lo:hi], plan.sid[lo:hi],
                           plan.gk[lo:hi], plan.rel[lo:hi],
                           plan.arr[lo:hi], plan.e_goal[lo:hi],
-                          plan.scale[lo:hi], plan.now[lo:hi])
+                          plan.scale[lo:hi], plan.dead[lo:hi],
+                          plan.now[lo:hi])
                     if policy == "alert":
                         carry, ys = fn(carry, goal, 0.0, xs)
                     else:

@@ -105,11 +105,63 @@ def compute_gateway_golden(table) -> dict:
     return summarize_gateway(res)
 
 
+def straggler_config(table):
+    """Pinned single-tenant straggler scenario shared by the generator
+    and ``tests/test_faults.py``: ``n_sessions == n_lanes`` (no paging,
+    so the lane<->session identity is stable and per-lane detection is
+    well-posed), one lane ramping to 3x slow-down mid-run."""
+    from benchmarks.common import deadline_range
+    from repro.serving.sim import CPU_ENV
+    from repro.traffic import PoissonProcess, TenantSpec, build_sessions
+    from repro.traffic.faults import FaultSchedule, LaneStraggler
+
+    deadline = float(deadline_range(table, 5)[3])
+    n_lanes = 8
+    mix = [TenantSpec("t", Goal.MINIMIZE_ENERGY,
+                      Constraints(deadline=deadline, accuracy_goal=0.78),
+                      PoissonProcess(0.8 / deadline), n_sessions=n_lanes,
+                      phases=CPU_ENV)]
+    sessions = build_sessions(mix, 40 * deadline, seed=7)
+    faults = FaultSchedule(n_lanes, [LaneStraggler(
+        lane=5, start=10 * deadline, magnitude=2.0,
+        ramp_s=5 * deadline)], seed=0)
+    return sessions, n_lanes, deadline, faults
+
+
+def compute_straggler_golden(table) -> dict:
+    """Golden detection trace: the Kalman-bank detector's trip set and
+    latency on the pinned straggler scenario, plus the clean-trace
+    false-positive count (must stay zero)."""
+    import numpy as np
+
+    from repro.traffic import SessionGateway, generate_requests
+    from repro.traffic.faults import KalmanLaneDetector
+
+    sessions, n_lanes, deadline, faults = straggler_config(table)
+    det = KalmanLaneDetector(n_lanes)
+    gw = SessionGateway(table, n_lanes, tick=deadline)
+    gw.run(sessions, generate_requests(sessions), faults=faults,
+           detector=det)
+    clean_det = KalmanLaneDetector(n_lanes)
+    gw2 = SessionGateway(table, n_lanes, tick=deadline)
+    gw2.run(sessions, generate_requests(sessions), detector=clean_det)
+    return {
+        "fault_lane": 5,
+        "fault_start_rounds": 10,
+        "tripped_lanes": [int(x) for x in np.nonzero(det.tripped)[0]],
+        "first_trip_time_s": float(det.first_trip_time[5]),
+        "detection_latency_rounds": float(
+            det.detection_latency(5, 10 * deadline) / deadline),
+        "clean_false_positives": int(clean_det.tripped.sum()),
+    }
+
+
 def compute_golden() -> dict:
     table, cons = golden_config()
     out = {"seed": GOLDEN_SEED, "budget_w": GOLDEN_BUDGET_W,
            "goal": "maximize_accuracy", "envs": {},
-           "gateway": compute_gateway_golden(table)}
+           "gateway": compute_gateway_golden(table),
+           "straggler": compute_straggler_golden(table)}
     for env_name in ("default", "cpu", "memory"):
         trace = EnvironmentTrace(ENVS[env_name], seed=GOLDEN_SEED)
         sim = InferenceSim(table, trace)

@@ -17,7 +17,8 @@ import os
 import pytest
 
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
-LINTED_PACKAGES = ("core", "serving", "traffic", "kernels")
+LINTED_PACKAGES = ("core", "serving", "traffic", "kernels", "runtime",
+                   "checkpoint")
 
 
 def _iter_py_files():
@@ -75,4 +76,5 @@ def test_gate_covers_both_packages():
     files = {os.path.basename(p) for p in _iter_py_files()}
     assert {"batched.py", "kalman.py", "sim.py", "alert_server.py",
             "gateway.py", "workloads.py", "loadsweep.py",
-            "alert_select.py", "ops.py"} <= files
+            "alert_select.py", "ops.py", "faults.py", "straggler.py",
+            "io.py"} <= files
