@@ -969,6 +969,97 @@ def bench_megatick(s: int = 100_000, n_lanes: int = 4096,
     }
 
 
+def bench_obs(s: int = 20_000, n_lanes: int = 1024, rounds: int = 24,
+              reps: int = 3, seed: int = 11, quick: bool = False) -> dict:
+    """Flight-recorder cost + neutrality on the megatick round clock
+    (docs/OBSERVABILITY.md).
+
+    The same saturating workload runs three ways — ``bare``
+    (``obs=None``), ``disabled`` (``FlightRecorder(enabled=False)``,
+    which must cost ~zero: every site resolves it to the bare path),
+    and ``instrumented`` (full recorder: registry + spans + the
+    ring-extended scan executable).  Two claims:
+
+    * **neutrality** (exact): every result array of the disabled and
+      instrumented runs is bitwise identical to the bare run — the
+      pure-observer contract, checked as ``obs_neutral``;
+    * **overhead** (timing): min-of-``reps`` instrumented scan time is
+      within ``overhead_ceiling`` (5 %) of bare, and the disabled run
+      is too (the micro-assert that a dormant recorder costs nothing
+      measurable).  Timing ratios get the same same-seed noise retry
+      as churn/sharded in :func:`run`.
+    """
+    from benchmarks.common import deadline_range, family_table
+    from repro.obs import FlightRecorder
+    from repro.serving.sim import CPU_ENV
+    from repro.traffic import (MegatickGateway, PoissonProcess,
+                               TenantSpec, build_sessions,
+                               generate_requests)
+
+    if quick:
+        rounds, reps = min(rounds, 12), 2
+    table = family_table("image")
+    dl = float(deadline_range(table, 5)[3])
+    cons = Constraints(deadline=dl, accuracy_goal=0.78)
+    rate = 1.0 * (n_lanes / dl) / s
+    mix = [TenantSpec("min-energy", Goal.MINIMIZE_ENERGY, cons,
+                      PoissonProcess(rate), n_sessions=s,
+                      phases=CPU_ENV)]
+    sessions = build_sessions(mix, rounds * dl, seed=seed)
+    requests = generate_requests(sessions)
+
+    recorders = {"bare": None,
+                 "disabled": FlightRecorder(enabled=False),
+                 "instrumented": FlightRecorder()}
+    gws = {name: MegatickGateway(table, n_lanes, tick=dl,
+                                 max_queue=4 * n_lanes, chunk=rounds,
+                                 obs=obs)
+           for name, obs in recorders.items()}
+    results = {name: gw.run(sessions, requests)   # compile each variant
+               for name, gw in gws.items()}
+    # Interleaved min-of-reps (the churn estimator): timing each variant
+    # back-to-back within a rep cancels the slow drift (cache/frequency
+    # warm-up) that sequential per-variant loops fold into the ratio.
+    scan_s = {name: float("inf") for name in gws}
+    for _ in range(reps):
+        for name, gw in gws.items():
+            results[name] = gw.run(sessions, requests)
+            scan_s[name] = min(scan_s[name], gw.last_scan_s)
+    variants = {name: {"scan_s": scan_s[name],
+                       "rounds_per_sec":
+                           results[name].n_rounds / scan_s[name],
+                       "n_compiles": list(gws[name].n_compiles())}
+                for name in gws}
+
+    fields = ("sid", "status", "start", "latency", "sojourn", "missed",
+              "accuracy", "energy", "model_index", "power_index")
+    ref = results["bare"]
+    neutral = all(
+        np.array_equal(np.asarray(getattr(results[v], f)),
+                       np.asarray(getattr(ref, f)))
+        for v in ("disabled", "instrumented") for f in fields)
+    inst = recorders["instrumented"]
+    bare_s = variants["bare"]["scan_s"]
+    return {
+        "n_sessions": s,
+        "n_lanes": n_lanes,
+        "tick_s": dl,
+        "n_rounds": ref.n_rounds,
+        "offered": len(requests),
+        "variants": variants,
+        "neutral": neutral,
+        "overhead_ceiling": 1.05,
+        "overhead_ratio": variants["instrumented"]["scan_s"] / bare_s,
+        "disabled_overhead_ratio": variants["disabled"]["scan_s"] / bare_s,
+        # 1 + reps runs share one recorder: the registry/ring accumulate.
+        "n_metrics": len(inst.metrics),
+        "n_spans": len(inst.spans),
+        "spans_dropped": inst.spans.dropped,
+        "ring_rounds_seen": inst.ring.n_seen,
+        "ring_rounds_expected": (1 + reps) * ref.n_rounds,
+    }
+
+
 def bench_sharded(s: int = 65536, ticks: int = 10, reps: int = 3,
                   n_devices: int = 8) -> dict:
     """Lane-sharded vs single-device lockstep tick at fleet scale.
@@ -1039,6 +1130,19 @@ def run(quick: bool = False) -> dict:
             megatick = retry
         megatick["retried"] = True
     traffic["megatick"] = megatick
+    # Flight-recorder neutrality is exact (no retry needed); the two
+    # overhead ratios are timing claims near a tight 5% bar, so they get
+    # the same same-seed noise-retry as churn/sharded/megatick.
+    obs = bench_obs(quick=quick)
+    if obs["overhead_ratio"] > obs["overhead_ceiling"] or \
+            obs["disabled_overhead_ratio"] > obs["overhead_ceiling"]:
+        retry = bench_obs(quick=quick)
+        if max(retry["overhead_ratio"],
+               retry["disabled_overhead_ratio"]) < \
+                max(obs["overhead_ratio"],
+                    obs["disabled_overhead_ratio"]):
+            obs = retry
+        obs["retried"] = True
     # Acceptance S=65536 always (parity is the point; the timing side is
     # cheap — one fused call per backend per tick).
     kernel = bench_kernel_select(s=65536, ticks=6 if quick else 12)
@@ -1056,6 +1160,7 @@ def run(quick: bool = False) -> dict:
         "traffic": traffic,
         "kernel_select": kernel,
         "faults": faults,
+        "obs": obs,
         "speedup_at_1024": by_s[1024]["speedup"],
     }
     out["checks"] = {
@@ -1099,6 +1204,15 @@ def run(quick: bool = False) -> dict:
             and faults["detection"]["clean_false_positives"] == 0,
         "faults_kill_resume_bitwise": faults["kill_resume_bitwise"],
         "faults_no_retrace": faults["no_retrace"],
+        # Pure-observer contract: attaching the flight recorder changes
+        # no result bit, and costs <=5% scan time (disabled ~0%).
+        "obs_neutral": obs["neutral"],
+        "obs_overhead_le_5pct":
+            obs["overhead_ratio"] <= obs["overhead_ceiling"],
+        "obs_disabled_overhead_le_5pct":
+            obs["disabled_overhead_ratio"] <= obs["overhead_ceiling"],
+        "obs_ring_complete":
+            obs["ring_rounds_seen"] == obs["ring_rounds_expected"],
     }
     with open(_OUT, "w") as f:
         json.dump(out, f, indent=2)
@@ -1166,6 +1280,20 @@ def _print_faults(fr: dict) -> None:
           f"({d['recommendation']}), clean false positives "
           f"{d['clean_false_positives']}; kill/resume bitwise "
           f"{fr['kill_resume_bitwise']}; no retrace {fr['no_retrace']}")
+
+
+def _print_obs(o: dict) -> None:
+    """Render one bench_obs record."""
+    v = o["variants"]
+    print(f"  obs S={o['n_sessions']} over {o['n_lanes']} lanes, "
+          f"{o['n_rounds']} rounds: bare "
+          f"{v['bare']['rounds_per_sec']:.1f} rounds/s, disabled "
+          f"{o['disabled_overhead_ratio']:.3f}x, instrumented "
+          f"{o['overhead_ratio']:.3f}x (ceiling "
+          f"{o['overhead_ceiling']:.2f}x), neutral {o['neutral']}, "
+          f"{o['n_metrics']} metrics / {o['n_spans']} spans / "
+          f"{o['ring_rounds_seen']} ring rounds "
+          f"(dropped {o['spans_dropped']})")
 
 
 def _print_kernel(kr: dict) -> None:
@@ -1263,12 +1391,30 @@ def main() -> list[tuple]:
         for rh, rm in zip(sweeps["host"], sweeps["megatick"]):
             for scheme, sh in rh["schemes"].items():
                 sm = rm["schemes"][scheme]
+                # The gateway tag and compile accounting are the two
+                # fields that legitimately differ between regimes.
                 diff = [k for k in sh
-                        if k != "n_compiles" and sh[k] != sm[k]]
+                        if k not in ("n_compiles", "gateway")
+                        and sh[k] != sm[k]]
                 assert not diff, \
                     f"traffic smoke: megatick sweep diverged " \
                     f"({scheme}: {diff})"
-        print("  megatick sweep: identical to host gateway")
+                assert (sh["gateway"], sm["gateway"]) == \
+                    ("host", "megatick"), scheme
+        # Flat-compile accounting: every scheme's uniform n_compiles
+        # pair is identical at every load point (one trace for the
+        # whole sweep), and the estimate cache never compiles.
+        for g, rows_ in sweeps.items():
+            for scheme in rows_[0]["schemes"]:
+                ncs = [r["schemes"][scheme]["n_compiles"] for r in rows_]
+                assert all(nc == ncs[0] for nc in ncs), \
+                    f"traffic smoke: {g}/{scheme} compile count moved " \
+                    f"across loads ({ncs})"
+                assert ncs[0][0] == 0 and ncs[0][1] <= 1, \
+                    f"traffic smoke: {g}/{scheme} unexpected compiles " \
+                    f"({ncs[0]})"
+        print("  megatick sweep: identical to host gateway, "
+              "flat compile accounting")
         # Megatick leg 2: the acceptance-scale S=1e5 scan compiles once
         # and reproduces the host loop bitwise on a short horizon.
         m = bench_megatick(s=100_000, n_lanes=4096, rounds=8, reps=1)
@@ -1280,6 +1426,35 @@ def main() -> list[tuple]:
               f"{m['round_clock_rounds_per_sec']:.1f} rounds/s "
               f"({m['speedup_round_clock']:.1f}x host)")
         print("traffic smoke: ALL PASS")
+        return []
+    if "--obs-smoke" in sys.argv:
+        # CI smoke: the flight-recorder contract at reduced scale —
+        # asserts exact result neutrality across bare/disabled/
+        # instrumented and the <=5% overhead bars (same-seed retry for
+        # the timing side; neutrality never needs one), without
+        # touching BENCH_controller.json.
+        o = bench_obs(s=4096, n_lanes=256, quick=True)
+        if o["overhead_ratio"] > o["overhead_ceiling"] or \
+                o["disabled_overhead_ratio"] > o["overhead_ceiling"]:
+            retry = bench_obs(s=4096, n_lanes=256, quick=True)
+            if max(retry["overhead_ratio"],
+                   retry["disabled_overhead_ratio"]) < \
+                    max(o["overhead_ratio"],
+                        o["disabled_overhead_ratio"]):
+                o = retry
+            o["retried"] = True
+        _print_obs(o)
+        assert o["neutral"], \
+            "obs smoke: flight recorder perturbed the results"
+        assert o["overhead_ratio"] <= o["overhead_ceiling"], \
+            f"obs smoke: instrumented overhead {o['overhead_ratio']:.3f}x"
+        assert o["disabled_overhead_ratio"] <= o["overhead_ceiling"], \
+            f"obs smoke: disabled recorder cost " \
+            f"{o['disabled_overhead_ratio']:.3f}x"
+        assert o["ring_rounds_seen"] == o["ring_rounds_expected"], \
+            "obs smoke: telemetry ring missed rounds"
+        assert o["spans_dropped"] == 0, "obs smoke: span buffer overflow"
+        print("obs smoke: ALL PASS")
         return []
     quick = "--quick" in sys.argv
     t0 = time.time()
@@ -1311,6 +1486,7 @@ def main() -> list[tuple]:
     _print_traffic(out["traffic"])
     _print_kernel(out["kernel_select"])
     _print_faults(out["faults"])
+    _print_obs(out["obs"])
     failed = [k for k, v in out["checks"].items() if not v]
     print("claim checks:", "ALL PASS" if not failed else f"FAIL: {failed}")
     print(f"  wrote {_OUT} ({time.time() - t0:.0f}s)")

@@ -27,6 +27,7 @@ compiled programs with genuinely different latencies.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
@@ -190,7 +191,12 @@ class FleetAlertServer:
                  prompt_len: int = 8, gen_tokens: int = 4,
                  accuracy_window: int = 10,
                  start_active: bool = True,
-                 mesh=None, backend: str = "xla"):
+                 mesh=None, backend: str = "xla", obs=None):
+        # Optional flight recorder (repro.obs.FlightRecorder): tick
+        # timing + served/miss/energy counters, pure observer only.
+        self.obs = obs
+        self._ob = obs if (obs is not None
+                           and getattr(obs, "enabled", False)) else None
         self.engine = engine
         self.params = params
         self.goal = goal
@@ -295,10 +301,19 @@ class FleetAlertServer:
         without touching any other lane's state — the §5 churn
         protocol, no re-traces.  Tenants re-admit onto surviving lanes
         via :meth:`admit` as usual."""
-        for lane in np.atleast_1d(np.asarray(lanes, dtype=np.int64)):
+        lanes = np.atleast_1d(np.asarray(lanes, dtype=np.int64))
+        for lane in lanes:
             self.active[lane] = False
             self._dead[lane] = True
             self.lane_constraints[lane] = None
+        if self._ob is not None and lanes.size:
+            self._ob.metrics.counter(
+                "quarantine_events", gateway="fleet_server").inc()
+            self._ob.metrics.counter(
+                "lanes_quarantined", gateway="fleet_server").inc(
+                int(lanes.size))
+            self._ob.spans.event("quarantine", cat="fault",
+                                 lanes=[int(x) for x in lanes])
 
     def revive_lanes(self, lanes) -> None:
         """Clear the quarantine on ``lanes`` (device restored after a
@@ -341,6 +356,7 @@ class FleetAlertServer:
         falls back to the lane's :meth:`admit`-installed override, so
         gateway tenants carry their own deadlines.  Returns one
         ``ServedInput`` per live lane, ``None`` at dead lanes."""
+        t_tick = time.perf_counter() if self._ob is not None else 0.0
         cap = self.n_streams
         assert len(prompts) == cap
         if constraints is None:
@@ -409,5 +425,19 @@ class FleetAlertServer:
                       active_power=active_p, mask=act)
         if self._goal_bank is not None:
             self._goal_bank.record(accs, mask=act)
+        if self._ob is not None:
+            m = self._ob.metrics
+            lab = dict(gateway="fleet_server")
+            m.counter("requests_served", **lab).inc(int(act.sum()))
+            m.counter("deadline_misses", **lab).inc(int(missed.sum()))
+            m.counter("energy_served_j", **lab).inc(
+                float(sum(o.energy for o in outs if o is not None)))
+            m.counter("rounds_served", **lab).inc()
+            m.gauge("n_compiles_estimate", **lab).set(
+                self.scoring.n_compiles()[0])
+            m.gauge("n_compiles_select", **lab).set(
+                self.scoring.n_compiles()[1])
+            m.timer("serve_tick", **lab).observe(
+                time.perf_counter() - t_tick)
         self.history.append(outs)
         return outs

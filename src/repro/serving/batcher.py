@@ -50,7 +50,7 @@ class DeadlineBatcher:
     deterministic per run and never leak across batchers."""
 
     def __init__(self, batch_size: int, min_feasible_latency: float = 0.0,
-                 max_queue: int | None = None):
+                 max_queue: int | None = None, metrics=None):
         self.batch_size = batch_size
         self.min_feasible_latency = min_feasible_latency
         self.max_queue = max_queue
@@ -58,6 +58,14 @@ class DeadlineBatcher:
         self._heap: list[tuple[float, int, Request]] = []
         self.rejected: list[Request] = []
         self.overflowed: list[Request] = []
+        # Optional observability (repro.obs.MetricsRegistry): pure
+        # counters on the admission edges, no behavioural change.
+        self._m_sub = self._m_ovf = self._m_rej = self._m_req = None
+        if metrics is not None:
+            self._m_sub = metrics.counter("queue_submitted")
+            self._m_ovf = metrics.counter("queue_overflowed")
+            self._m_rej = metrics.counter("queue_failfast_rejected")
+            self._m_req = metrics.counter("queue_requeued")
 
     def submit(self, req: Request) -> bool:
         """Enqueue one request (EDF heap keyed on deadline, submission
@@ -67,7 +75,11 @@ class DeadlineBatcher:
         True otherwise."""
         if self.max_queue is not None and len(self._heap) >= self.max_queue:
             self.overflowed.append(req)   # refused: consumes no id/seq
+            if self._m_ovf is not None:
+                self._m_ovf.inc()
             return False
+        if self._m_sub is not None:
+            self._m_sub.inc()
         seq = next(self._counter)
         if req.req_id is None:
             req.req_id = seq
@@ -87,6 +99,8 @@ class DeadlineBatcher:
             raise ValueError(
                 "requeue() takes a request previously admitted by "
                 "submit(); this one has no heap seq")
+        if self._m_req is not None:
+            self._m_req.inc()
         heapq.heappush(self._heap, (req.deadline, req._seq, req))
 
     def __len__(self) -> int:
@@ -100,6 +114,8 @@ class DeadlineBatcher:
             _, _, req = heapq.heappop(self._heap)
             if req.deadline - now < self.min_feasible_latency:
                 self.rejected.append(req)
+                if self._m_rej is not None:
+                    self._m_rej.inc()
                 continue
             return req
         return None

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+from contextlib import nullcontext
 from typing import Sequence
 
 import numpy as np
@@ -56,6 +57,51 @@ from repro.traffic.workloads import (Session, TrafficRequest,
 SERVED = 0
 REJECTED_INFEASIBLE = 1     # EDF fail-fast: slack below any feasible run
 REJECTED_BACKPRESSURE = 2   # bounded queue was full at arrival
+
+
+def _resolve_obs(obs):
+    """An attached-and-enabled flight recorder, else None.
+
+    ``obs=None`` and ``obs=FlightRecorder(enabled=False)`` both resolve
+    to None here, so every instrumentation site reduces to one pointer
+    check — the asserted ~zero-cost disabled mode of the pure-observer
+    contract (docs/OBSERVABILITY.md)."""
+    return obs if (obs is not None and getattr(obs, "enabled", False)) \
+        else None
+
+
+def _obs_record_result(metrics, out: "GatewayResult", *, gateway: str,
+                       policy: str) -> None:
+    """Fold one finished run's :class:`GatewayResult` into the registry:
+    disposition counters, paging totals, and the headline SLO/efficiency
+    gauges — shared by both gateways so the metric catalog is uniform
+    across the host loop and the megatick regimes."""
+    lab = dict(gateway=gateway, policy=policy)
+    metrics.counter("requests_offered", **lab).inc(out.offered)
+    metrics.counter("requests_served", **lab).inc(int(out.served.sum()))
+    metrics.counter("requests_rejected_infeasible", **lab).inc(
+        int((out.status == REJECTED_INFEASIBLE).sum()))
+    metrics.counter("requests_rejected_backpressure", **lab).inc(
+        int((out.status == REJECTED_BACKPRESSURE).sum()))
+    metrics.counter("requests_good", **lab).inc(int(out.good.sum()))
+    metrics.counter("deadline_misses", **lab).inc(
+        int(out.missed[out.served].sum()))
+    metrics.counter("energy_served_j", **lab).inc(
+        float(out.energy[out.served].sum()))
+    metrics.counter("rounds_served", **lab).inc(out.n_rounds)
+    metrics.counter("pages_in", **lab).inc(out.pages_in)
+    metrics.counter("pages_out", **lab).inc(out.pages_out)
+    metrics.gauge("slo_miss_rate", **lab).set(out.slo_miss_rate)
+    metrics.gauge("served_miss_rate", **lab).set(out.served_miss_rate)
+    metrics.gauge("reject_rate", **lab).set(out.reject_rate)
+    metrics.gauge("goodput_rps", **lab).set(out.goodput)
+    eg = out.energy_per_good
+    metrics.gauge("energy_per_good_j", **lab).set(
+        eg if np.isfinite(eg) else 0.0)
+    metrics.gauge("n_compiles_estimate", gateway=gateway).set(
+        out.n_compiles[0])
+    metrics.gauge("n_compiles_select", gateway=gateway).set(
+        out.n_compiles[1])
 
 # GatewayResult arrays a checkpoint must carry (the loop mutates these;
 # sid/index/arrival are rebuilt from the workload at resume).
@@ -203,8 +249,13 @@ class SessionGateway:
                  max_queue: int | None = None,
                  min_feasible_latency: float | None = None,
                  accuracy_window: int = 10, backend: str = "xla",
-                 mesh=None):
+                 mesh=None, obs=None):
         self.table = table
+        # Optional flight recorder (repro.obs.FlightRecorder).  Strictly
+        # a pure observer: every pick, bank state, and golden trace is
+        # bitwise identical with or without it (tests/test_obs.py).
+        self.obs = obs
+        self._ob = _resolve_obs(obs)
         self.n_lanes = int(n_lanes)
         self.phi_true = float(phi_true)
         self.tick = tick
@@ -428,7 +479,9 @@ class SessionGateway:
         queue = DeadlineBatcher(batch_size=self.n_lanes,
                                 min_feasible_latency=
                                 self.min_feasible_latency,
-                                max_queue=self.max_queue)
+                                max_queue=self.max_queue,
+                                metrics=self._ob.metrics
+                                if self._ob else None)
         return _RunState(requests=requests, sess=sess, tick=float(tick),
                          queue=queue, out=out)
 
@@ -497,7 +550,9 @@ class SessionGateway:
         """
         rs = self._init_run(sessions, requests, policy=policy,
                             static_config=static_config, faults=faults)
-        self._load_checkpoint(rs, checkpoint_dir)
+        with self._ob.spans.span("checkpoint_restore", cat="checkpoint") \
+                if self._ob else nullcontext():
+            self._load_checkpoint(rs, checkpoint_dir)
         return self._drive(rs, policy, static_config, faults, detector,
                            checkpoint_dir, checkpoint_every,
                            kill_at_round)
@@ -513,6 +568,9 @@ class SessionGateway:
             rs.requests, rs.sess, rs.tick, rs.queue, rs.out
         n = len(requests)
         lanes_arange = np.arange(self.n_lanes)
+        ob = self._ob
+        q_depth = ob.metrics.histogram("queue_depth", gateway="host") \
+            if ob else None
         while rs.ri < n or len(queue):
             if kill_at_round is not None and rs.iters == kill_at_round:
                 raise InjectedFailure(
@@ -537,6 +595,14 @@ class SessionGateway:
                     ev = [int(ln) for ln in np.nonzero(newly_dead)[0]
                           if self._resident[ln] >= 0]
                     self._evict_lanes(ev)
+                    if ob:
+                        lanes = [int(x) for x in np.nonzero(newly_dead)[0]]
+                        ob.metrics.counter("quarantine_events",
+                                           gateway="host").inc()
+                        ob.metrics.counter("lanes_quarantined",
+                                           gateway="host").inc(len(lanes))
+                        ob.spans.event("quarantine", cat="fault",
+                                       lanes=lanes, now_s=float(now))
                 self._dead = dead_now
                 fmul = faults.slow_at(now)
             # --- arrivals due by this round (backpressure at submit) ---
@@ -545,6 +611,8 @@ class SessionGateway:
                 if not queue.submit(req):
                     out.status[req._row] = REJECTED_BACKPRESSURE
                 rs.ri += 1
+            if q_depth is not None:
+                q_depth.observe(len(queue))
             # --- EDF pop onto the lanes that are free this round, at
             # most one request per session (a session is sequential:
             # whether queued behind itself or mid-service on a busy
@@ -580,22 +648,32 @@ class SessionGateway:
                 out.status[req._row] = REJECTED_INFEASIBLE
                 out.start[req._row] = now
             if batch:
-                rs.last_completion = max(
-                    rs.last_completion, self._serve_round(
-                        batch, sess, now, rs.round_k, policy,
-                        static_config, lanes_arange, out, fmul,
-                        detector))
+                with ob.spans.span("serve_round", cat="gateway",
+                                   round_k=rs.round_k,
+                                   batch=len(batch)) \
+                        if ob else nullcontext():
+                    rs.last_completion = max(
+                        rs.last_completion, self._serve_round(
+                            batch, sess, now, rs.round_k, policy,
+                            static_config, lanes_arange, out, fmul,
+                            detector))
                 rs.n_rounds += 1
             rs.round_k += 1
             rs.iters += 1
             if checkpoint_dir is not None and \
                     rs.iters % max(checkpoint_every, 1) == 0:
-                self._save_checkpoint(rs, checkpoint_dir)
+                with ob.spans.span("checkpoint_write", cat="checkpoint",
+                                   iters=rs.iters) \
+                        if ob else nullcontext():
+                    self._save_checkpoint(rs, checkpoint_dir)
         out.horizon = max(rs.last_completion,
                           float(out.arrival[-1]) if n else 0.0)
         out.n_rounds = rs.n_rounds
         out.pages_in, out.pages_out = self.pages_in, self.pages_out
         out.n_compiles = self.engine.n_compiles()
+        if ob:
+            _obs_record_result(ob.metrics, out, gateway="host",
+                               policy=policy)
         return out
 
     # -------------------------------------------------------------- #
@@ -738,7 +816,11 @@ class SessionGateway:
         lanes with one masked engine call (or the fixed static config),
         deliver through the shared tick kernel, absorb feedback.  Returns
         the round's last completion time."""
-        lanes = self._page_in([r.sid for r in batch], sess, round_k, now)
+        ob = self._ob
+        with ob.spans.span("page_in", cat="paging", round_k=round_k) \
+                if ob else nullcontext():
+            lanes = self._page_in([r.sid for r in batch], sess, round_k,
+                                  now)
         act = np.zeros(self.n_lanes, bool)
         dvec = np.ones(self.n_lanes)
         e_goal = np.zeros(self.n_lanes)
@@ -767,6 +849,7 @@ class SessionGateway:
                 active=act, predictions=False)
             i_pick, j_pick = b.model_index, b.power_index
         else:
+            b = None
             i_pick = np.full(self.n_lanes, static_config[0],
                              dtype=np.int64)
             j_pick = np.full(self.n_lanes, static_config[1],
@@ -774,6 +857,10 @@ class SessionGateway:
         d = deliver_tick(self.table, self._st, i_pick, j_pick, scale,
                          dvec, self.phi_true, self._is_anytime,
                          self.table.latency[i_pick, j_pick])
+        # Pre-update Eq. 6 prior, snapshotted only for the innovation
+        # histogram below (reads never perturb the bank).
+        mu_prev = np.asarray(self.slow.mu) \
+            if (ob is not None and policy == "alert") else None
         if policy == "alert":
             observe_fleet(self.slow, self.idle, d.observed, d.profiled,
                           deadline_missed=d.miss_flag,
@@ -786,8 +873,34 @@ class SessionGateway:
                 # Detection reads the Eq.7 posterior AFTER the round's
                 # update — ALERT's own estimate, not an oracle flag.
                 # Pure observer: selection above never sees it.
-                detector.observe(np.asarray(self.slow.mu),
-                                 np.asarray(self.slow.sigma), act, now)
+                newly = detector.observe(np.asarray(self.slow.mu),
+                                         np.asarray(self.slow.sigma),
+                                         act, now)
+                if ob is not None and newly.size:
+                    ob.metrics.counter("fault_trips",
+                                       gateway="host").inc(newly.size)
+                    ob.spans.event("fault_trip", cat="fault",
+                                   lanes=[int(x) for x in newly],
+                                   now_s=float(now))
+        if ob is not None:
+            if mu_prev is not None:
+                # |z - mu_prior| with z the Eq. 6 measurement
+                # observed/profiled — the innovation magnitude the
+                # Kalman gain weighs this round.
+                z = np.asarray(d.observed) / np.asarray(d.profiled)
+                ob.metrics.histogram(
+                    "kalman_innovation", gateway="host").observe_many(
+                    np.abs(z - mu_prev)[act])
+            feas = (np.asarray(b.feasible) & act) if b is not None \
+                else act
+            relaxed = ((np.asarray(b.relaxed_code) != 0) & act) \
+                if b is not None else np.zeros_like(act)
+            ob.ring.push_rounds(
+                now_s=[now], n_active=[int(act.sum())],
+                n_feasible=[int(feas.sum())],
+                n_relaxed=[int(relaxed.sum())],
+                energy_j=[float(np.asarray(d.energy)[act].sum())],
+                n_missed=[int(np.asarray(d.missed)[act].sum())])
         last = now
         for req, lane in zip(batch, lanes):
             rid = req._row

@@ -48,7 +48,7 @@ def sweep_loads(table: ProfileTable, mix: Sequence[TenantSpec],
                 max_queue: int | None = None, tick: float | None = None,
                 schemes: Sequence[str] = ("alert", "oracle_static"),
                 deadline_cv: float = 0.0,
-                gateway: str = "host") -> list[dict]:
+                gateway: str = "host", obs=None) -> list[dict]:
     """Sweep offered load over ``loads`` for each scheme.
 
     One :class:`~repro.traffic.gateway.SessionGateway` per scheme serves
@@ -63,6 +63,16 @@ def sweep_loads(table: ProfileTable, mix: Sequence[TenantSpec],
     device-resident :class:`~repro.traffic.megatick.MegatickGateway`
     instead — bitwise-identical records in the coarse-tick regime, one
     compiled super-round scan for the whole sweep (DESIGN.md §7).
+
+    ``obs`` attaches one :class:`~repro.obs.FlightRecorder` to EVERY
+    scheme's gateway: the per-scheme metrics share one registry (label
+    ``gateway=``/``policy=`` disambiguate), spans and the telemetry
+    ring interleave in sweep order, and — the pure-observer contract —
+    every recorded number is bitwise identical to the unobserved sweep.
+    Each per-scheme record also carries the ``gateway`` tag and the
+    uniform ``n_compiles`` pair (estimate-cache, select/scan-cache):
+    flat accounting across the whole sweep is asserted by the
+    ``--traffic-smoke`` CI leg.
     """
     if gateway == "megatick":
         from repro.traffic.megatick import MegatickGateway as GW
@@ -71,7 +81,7 @@ def sweep_loads(table: ProfileTable, mix: Sequence[TenantSpec],
     else:
         raise ValueError(f"gateway must be 'host' or 'megatick', "
                          f"got {gateway!r}")
-    gw = GW(table, n_lanes, max_queue=max_queue, tick=tick) \
+    gw = GW(table, n_lanes, max_queue=max_queue, tick=tick, obs=obs) \
         if "alert" in schemes else None
     gw_static = gw_noadm = None
     static_cfg: tuple[int, int] | None = None
@@ -82,13 +92,14 @@ def sweep_loads(table: ProfileTable, mix: Sequence[TenantSpec],
         static_cfg = hindsight_static_config(
             table, mix[0].phases, mix[0].goal, mix[0].constraints,
             seed=seed)
-        gw_static = GW(table, n_lanes, max_queue=max_queue, tick=tick)
+        gw_static = GW(table, n_lanes, max_queue=max_queue, tick=tick,
+                       obs=obs)
     if "alert_no_admission" in schemes:
         # Ablation probe: same controller, admission control disabled
         # (no fail-fast, unbounded queue) — quantifies what shedding
         # buys.
         gw_noadm = GW(table, n_lanes, max_queue=None,
-                      tick=tick, min_feasible_latency=0.0)
+                      tick=tick, min_feasible_latency=0.0, obs=obs)
     rows = []
     for li, load in enumerate(loads):
         sessions = build_sessions([t.scaled(load) for t in mix], horizon,
@@ -123,7 +134,12 @@ def sweep_loads(table: ProfileTable, mix: Sequence[TenantSpec],
                 "n_rounds": res.n_rounds,
                 "pages_in": res.pages_in,
                 "pages_out": res.pages_out,
+                # Uniform across gateways: (estimate-cache, select/scan
+                # cache) — host static never compiles (0, 0); megatick
+                # static compiles its one scan (0, 1); flat across load
+                # points either way (asserted in --traffic-smoke).
                 "n_compiles": list(res.n_compiles),
+                "gateway": gateway,
             }
         rows.append(row)
     return rows

@@ -58,6 +58,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from contextlib import nullcontext
 from typing import Sequence
 
 import numpy as np
@@ -67,11 +68,14 @@ from repro.core.batched import (BatchedAlertEngine, _goal_record_step,
 from repro.core.kalman import (IdlePowerFilterBank, SlowdownFilterBank,
                                fused_fleet_step)
 from repro.core.profiles import ProfileTable
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.ring import round_aggregates
 from repro.serving.batcher import DeadlineBatcher
 from repro.serving.sim import deliver_step
 from repro.traffic.gateway import (REJECTED_BACKPRESSURE,
                                    REJECTED_INFEASIBLE, SERVED,
-                                   GatewayResult, SessionGateway)
+                                   GatewayResult, SessionGateway,
+                                   _obs_record_result, _resolve_obs)
 from repro.traffic.workloads import Session, TrafficRequest, \
     generate_requests
 
@@ -118,8 +122,21 @@ class MegatickGateway:
                  max_queue: int | None = None,
                  min_feasible_latency: float | None = None,
                  accuracy_window: int = 10, backend: str = "xla",
-                 mesh=None, chunk: int = 128):
+                 mesh=None, chunk: int = 128, obs=None):
         self.table = table
+        # Optional flight recorder (repro.obs.FlightRecorder): attaching
+        # one adds the telemetry-ring outputs to the scan (a separate
+        # jit cache entry) and host spans/metrics — all pure observers,
+        # bitwise-neutral per tests/test_obs.py.
+        self.obs = obs
+        self._ob = _resolve_obs(obs)
+        # Phase timers live in a registry even with no recorder attached
+        # so plan/scan wall time ACCUMULATES across repeated run() calls
+        # (total_s/count); last_plan_s/last_scan_s stay as read-through
+        # aliases of the most recent observation.
+        reg = self._ob.metrics if self._ob else MetricsRegistry()
+        self._plan_timer = reg.timer("megatick_plan", gateway="megatick")
+        self._scan_timer = reg.timer("megatick_scan", gateway="megatick")
         self.n_lanes = int(n_lanes)
         self.phi_true = float(phi_true)
         self.tick = tick
@@ -141,6 +158,35 @@ class MegatickGateway:
         self._is_anytime[sorted({i for g in groups.values()
                                  for i in g})] = True
         self._chunk_jits: dict = {}
+
+    # -------------------------------------------------------------- #
+    # phase timers                                                    #
+    # -------------------------------------------------------------- #
+    @property
+    def last_plan_s(self) -> float:
+        """Wall time of the most recent :meth:`run`'s host planner
+        (read-through alias of the ``megatick_plan`` phase timer; 0.0
+        before the first run)."""
+        return self._plan_timer.last_s
+
+    @property
+    def last_scan_s(self) -> float:
+        """Wall time of the most recent :meth:`run`'s device round
+        clock — scan dispatches + result scatter (read-through alias of
+        the ``megatick_scan`` phase timer; 0.0 before the first run)."""
+        return self._scan_timer.last_s
+
+    @property
+    def total_plan_s(self) -> float:
+        """Planner wall time accumulated over every :meth:`run` of this
+        gateway's lifetime (a load sweep's total planning cost)."""
+        return self._plan_timer.total_s
+
+    @property
+    def total_scan_s(self) -> float:
+        """Round-clock wall time accumulated over every :meth:`run` of
+        this gateway's lifetime."""
+        return self._scan_timer.total_s
 
     # -------------------------------------------------------------- #
     # host planner                                                    #
@@ -269,10 +315,14 @@ class MegatickGateway:
                 f"to in-round latencies (busy lanes at round "
                 f"boundaries) — use SessionGateway for that regime")
         self._reset_lru(len(sessions))
+        ob = self._ob
         queue = DeadlineBatcher(batch_size=self.n_lanes,
                                 min_feasible_latency=
                                 self.min_feasible_latency,
-                                max_queue=self.max_queue)
+                                max_queue=self.max_queue,
+                                metrics=ob.metrics if ob else None)
+        q_depth = ob.metrics.histogram("queue_depth",
+                                       gateway="megatick") if ob else None
         code_of: dict = {}      # goal_codes is pure per goal: memoize
         for s in sessions:
             if s.goal not in code_of:
@@ -316,12 +366,23 @@ class MegatickGateway:
                         self._lane_arr[olds] = -1
                         self._resident[ev] = -1
                         self.pages_out += int(ev.size)
+                    if ob:
+                        lanes = [int(x) for x in np.nonzero(newly_dead)[0]]
+                        ob.metrics.counter("quarantine_events",
+                                           gateway="megatick").inc()
+                        ob.metrics.counter(
+                            "lanes_quarantined",
+                            gateway="megatick").inc(len(lanes))
+                        ob.spans.event("quarantine", cat="fault",
+                                       lanes=lanes, now_s=float(now))
                 self._dead = dead_now
             while ri < n and requests[ri].arrival <= now:
                 req = requests[ri]
                 if not queue.submit(req):
                     out.status[req._row] = REJECTED_BACKPRESSURE
                 ri += 1
+            if q_depth is not None:
+                q_depth.observe(len(queue))
             n_rej = len(queue.rejected)
             # avail == surviving lanes and no busy-lane deferral: the
             # regime contract makes every lane idle at every round
@@ -414,13 +475,21 @@ class MegatickGateway:
     # -------------------------------------------------------------- #
     # device scan                                                     #
     # -------------------------------------------------------------- #
-    def _chunk_fn(self, policy: str, static_config):
+    def _chunk_fn(self, policy: str, static_config, ring: bool = False):
         """Build (once per policy/config) the jitted super-round chunk:
         a donated ``lax.scan`` over ``chunk`` rounds.  Profile constants
         are baked into the trace; all shapes are fixed at
         ``[chunk, n_lanes]`` / ``[S]``, so every dispatch of a run — and
-        every run of a load sweep — reuses one compiled executable."""
-        key = (policy, static_config)
+        every run of a load sweep — reuses one compiled executable.
+
+        ``ring=True`` (an attached flight recorder) appends the
+        telemetry-ring reductions (:func:`repro.obs.ring.
+        round_aggregates`) as extra stacked ``ys`` — per-round scalars
+        reduced from values the body already computes, with the donated
+        carries untouched.  The flag is part of the jit key: the bare
+        and instrumented executables coexist and the per-lane ops are
+        identical (the pure-observer tests pin their outputs bitwise)."""
+        key = (policy, static_config, ring)
         if key in self._chunk_jits:
             return self._chunk_jits[key]
         import jax
@@ -458,7 +527,14 @@ class MegatickGateway:
                 run_t, acc, energy, missed, *_ = deliver_step(
                     i, j, scl, dvec, phi_true, f_zero=fz, **consts)
                 sojourn = (now - arrv) + run_t
-                return fz, (run_t, acc, energy, missed, i, j, sojourn)
+                ys = (run_t, acc, energy, missed, i, j, sojourn)
+                if ring:
+                    # Static picks have no feasibility/relaxation
+                    # machinery: every active lane counts feasible,
+                    # none relaxed.
+                    ys = ys + round_aggregates(
+                        act, act, jnp.zeros_like(i), energy, missed)
+                return fz, ys
 
             def chunk_static(f_zero, xs):
                 """One super-round dispatch of the static policy
@@ -499,8 +575,8 @@ class MegatickGateway:
                     goal[sidv], buf[sidv], count[sidv], window, fz)
             else:
                 acc_goal = goal[sidv]
-            i, j, *_ = select(mu_l, sd_l, ph_l, dvec, acc_goal, egl,
-                              gkv, act)
+            i, j, _lat, _acc, _en, feas, relaxed = select(
+                mu_l, sd_l, ph_l, dvec, acc_goal, egl, gkv, act)
             (run_t, acc, energy, missed, p, observed, profiled,
              miss_flag) = deliver_step(i, j, scl, dvec, phi_true,
                                        f_zero=fz, **consts)
@@ -520,8 +596,15 @@ class MegatickGateway:
                 buf = buf.at[sidv].set(buf_n, mode="drop")
                 pos, count = put(pos, pos_n), put(count, cnt_n)
             sojourn = (now - arrv) + run_t
+            ys = (run_t, acc, energy, missed, i, j, sojourn)
+            if ring:
+                # Per-round telemetry reductions over values the body
+                # already computed (feasibility + relaxation come out
+                # of the same select call that produced the picks).
+                ys = ys + round_aggregates(act, feas, relaxed, energy,
+                                           missed)
             return ((mu, sigma, gain, qn, phv, var, buf, pos, count),
-                    (run_t, acc, energy, missed, i, j, sojourn))
+                    ys)
 
         def chunk_alert(carry, goal, f_zero, xs):
             """One super-round dispatch: scan `chunk` rounds with the
@@ -590,14 +673,17 @@ class MegatickGateway:
                 f"gateway has {self.n_lanes}")
         from jax.experimental import enable_x64
 
+        ob = self._ob
         t0 = time.perf_counter()
-        sid_index = {s.sid: k for k, s in enumerate(sessions)}
-        plan = self._plan(sessions, requests, sid_index, faults)
-        self.last_plan_s = time.perf_counter() - t0
+        with ob.spans.span("plan", cat="megatick") if ob \
+                else nullcontext():
+            sid_index = {s.sid: k for k, s in enumerate(sessions)}
+            plan = self._plan(sessions, requests, sid_index, faults)
+        self._plan_timer.observe(time.perf_counter() - t0)
         t0 = time.perf_counter()
         out = plan.out
         if plan.n_active:
-            fn = self._chunk_fn(policy, static_config)
+            fn = self._chunk_fn(policy, static_config, ring=ob is not None)
             with enable_x64():
                 if policy == "alert":
                     carry, goal = self._init_carry(sessions)
@@ -608,10 +694,13 @@ class MegatickGateway:
                           plan.arr[lo:hi], plan.e_goal[lo:hi],
                           plan.scale[lo:hi], plan.dead[lo:hi],
                           plan.now[lo:hi])
-                    if policy == "alert":
-                        carry, ys = fn(carry, goal, 0.0, xs)
-                    else:
-                        ys = fn(0.0, xs)
+                    with ob.spans.span("scan_dispatch", cat="megatick",
+                                       chunk_lo=lo) if ob \
+                            else nullcontext():
+                        if policy == "alert":
+                            carry, ys = fn(carry, goal, 0.0, xs)
+                        else:
+                            ys = fn(0.0, xs)
                     a = plan.act[lo:hi]
                     rows = plan.row[lo:hi][a]
                     out.latency[rows] = np.asarray(ys[0])[a]
@@ -632,10 +721,24 @@ class MegatickGateway:
                           - (plan.now[lo:hi, None] - plan.arr[lo:hi]))[a]
                     out.energy[rows] = pw * rt + self.phi_true * pw * \
                         np.maximum(dv - rt, 0.0)
+                    if ob is not None:
+                        # Drop the all-inactive pad rounds of the final
+                        # chunk; ring energy is the scan's own sum (may
+                        # differ in the last ulp from the host FMA
+                        # recompute above — docs/OBSERVABILITY.md).
+                        n_real = min(self.chunk, plan.n_active - lo)
+                        if n_real > 0:
+                            ob.ring.push_rounds(
+                                now_s=plan.now[lo:lo + n_real],
+                                n_active=np.asarray(ys[7])[:n_real],
+                                n_feasible=np.asarray(ys[8])[:n_real],
+                                n_relaxed=np.asarray(ys[9])[:n_real],
+                                energy_j=np.asarray(ys[10])[:n_real],
+                                n_missed=np.asarray(ys[11])[:n_real])
         # Wall time of the round clock itself (scan dispatch + result
         # scatter), separate from the host planner — what the megatick
         # bench reports as the device-resident rounds/sec.
-        self.last_scan_s = time.perf_counter() - t0
+        self._scan_timer.observe(time.perf_counter() - t0)
         served = out.status == SERVED
         last_completion = float(np.max(out.start[served]
                                        + out.latency[served])) \
@@ -646,6 +749,9 @@ class MegatickGateway:
         out.pages_in = getattr(self, "pages_in", 0)
         out.pages_out = getattr(self, "pages_out", 0)
         out.n_compiles = self.n_compiles()
+        if ob:
+            _obs_record_result(ob.metrics, out, gateway="megatick",
+                               policy=policy)
         return out
 
     def n_compiles(self) -> tuple[int, int]:

@@ -18,7 +18,7 @@ import pytest
 
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
 LINTED_PACKAGES = ("core", "serving", "traffic", "kernels", "runtime",
-                   "checkpoint")
+                   "checkpoint", "obs")
 
 
 def _iter_py_files():
@@ -77,4 +77,5 @@ def test_gate_covers_both_packages():
     assert {"batched.py", "kalman.py", "sim.py", "alert_server.py",
             "gateway.py", "workloads.py", "loadsweep.py",
             "alert_select.py", "ops.py", "faults.py", "straggler.py",
-            "io.py"} <= files
+            "io.py", "metrics.py", "spans.py", "ring.py",
+            "report.py"} <= files

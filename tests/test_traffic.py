@@ -782,6 +782,10 @@ class TestMegatickGateway:
                     if key == "n_compiles":
                         assert sm[key] == [0, 1]
                         continue
+                    if key == "gateway":
+                        assert (sh[key], sm[key]) == \
+                            ("host", "megatick")
+                        continue
                     assert sh[key] == sm[key], (scheme, key)
 
 
