@@ -1,0 +1,72 @@
+"""END-TO-END DRIVER: ALERT scheduling a REAL anytime model's measured
+staircase through the traffic gateway (ROADMAP item 2, DESIGN.md §12).
+
+Pipeline:
+  1. jointly train the reduced ``alert_anytime`` width-nested LM and
+     measure each level's real held-out accuracy;
+  2. build the live ProfileTable through the profiling harness — by
+     default with deterministic fake-clock latencies (each level's
+     nested-FLOP fraction), with ``--measured`` real wall clocks from
+     ServeEngine's per-level compiled programs;
+  3. sweep offered load through the session gateway three ways on the
+     SAME seeded workload: the full ALERT controller (model level x
+     power), application-only adaptation (levels only, power pinned at
+     the system default), and system-only adaptation (power only, app
+     frozen at its most-accurate config);
+  4. report energy-per-good and SLO-miss per scheme per load.
+
+    PYTHONPATH=src python examples/live_profile_demo.py [--measured]
+"""
+
+import argparse
+
+from repro.core.controller import Constraints, Goal
+from repro.profiling import live_profile_table, train_reduced_anytime
+from repro.serving.sim import DEFAULT_ENV
+from repro.traffic import PoissonProcess, TenantSpec, sweep_loads
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--measured", action="store_true",
+                    help="time real per-level compiled programs instead "
+                         "of the deterministic fake clock")
+    ap.add_argument("--train-steps", type=int, default=250)
+    args = ap.parse_args()
+
+    print("[1/3] joint-training the reduced alert_anytime family...")
+    trained = train_reduced_anytime(train_steps=args.train_steps)
+    print(f"      level accuracies: "
+          + " ".join(f"L{k + 1}={a:.3f}"
+                     for k, a in enumerate(trained.accuracies)))
+
+    mode = "measured" if args.measured else "fake"
+    print(f"[2/3] building the live ProfileTable ({mode} latencies, "
+          f"analytic 1/f power buckets)...")
+    table = live_profile_table(trained, mode=mode)
+    for k, name in enumerate(table.names):
+        print(f"      {name}: lat@full={table.latency[k, -1] * 1e3:.2f} ms"
+              f"  acc={table.accuracies[k]:.3f}")
+
+    print("[3/3] load sweep: alert vs app-only vs sys-only adaptation...")
+    top = float(table.latency[-1, -1])
+    dl = 2.0 * top
+    n_lanes, n_sessions = 32, 128
+    cons = Constraints(deadline=dl, accuracy_goal=0.40)
+    mix = [TenantSpec("min-energy", Goal.MINIMIZE_ENERGY, cons,
+                      PoissonProcess(0.5 * (n_lanes / dl) / n_sessions),
+                      n_sessions=n_sessions, phases=DEFAULT_ENV)]
+    rows = sweep_loads(table, mix, [0.5, 2.0, 8.0], n_lanes=n_lanes,
+                       horizon=20 * dl, seed=13, max_queue=4 * n_lanes,
+                       tick=dl / 4,
+                       schemes=("alert", "app_only", "sys_only"))
+    for r in rows:
+        print(f"  load {r['load']:4.1f} (offered {r['offered']})")
+        for s, d in r["schemes"].items():
+            print(f"    {s:9s} goodput={d['goodput_rps']:7.1f}/s  "
+                  f"energy/good={d['energy_per_good_j']:7.3f} J  "
+                  f"slo-miss={d['slo_miss_rate']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,8 @@ from repro.core.nesting import (DepthSpec, StripeSpec, block_triangular_mask,
                                 prefix_rmsnorm)
 from repro.core.power import PowerModel, predict_energy
 from repro.core.profiles import (Candidate, ProfileTable,
+                                 extrapolate_power_buckets,
+                                 measure_mean_latency,
                                  profile_from_roofline, profile_measured)
 
 __all__ = [
@@ -24,4 +26,5 @@ __all__ = [
     "joint_anytime_loss", "nested_linear", "nested_norm_linear",
     "prefix_rmsnorm", "PowerModel", "predict_energy",
     "Candidate", "ProfileTable", "profile_from_roofline", "profile_measured",
+    "extrapolate_power_buckets", "measure_mean_latency",
 ]

@@ -20,7 +20,16 @@ Two ways to build a table:
 
 * :func:`profile_measured` — empirical: run a list of jit'd callables on this
   host and record mean latency.  Used by the real tiny-model end-to-end
-  example (examples/serve_alert.py).
+  example (examples/serve_alert.py) and the live-profile harness
+  (``repro.profiling``).
+
+Measured timing contract (DESIGN.md §12): jitted callables return as soon
+as the computation is *dispatched*, not when it completes, so a bare
+``clock(); fn(); clock()`` measures dispatch cost.  Every measured path
+therefore syncs on the callable's return value (``jax.block_until_ready``
+by default) before reading the clock, and both the clock and the sync are
+injectable so deterministic tests can drive the whole pipeline from fake
+measurements.
 """
 
 from __future__ import annotations
@@ -176,6 +185,32 @@ class ProfileTable:
                     n_levels=cache.n_levels[idx]))
         return sub
 
+    def power_subset(self, indices: Sequence[int]) -> "ProfileTable":
+        """Restrict the table to power-cap columns ``indices``.
+
+        The application-only adaptation baseline (paper Table-style
+        competitor) runs the controller over the table pinned to the
+        system-default power column; more generally a platform with fewer
+        actuable DVFS states keeps only the columns it can set.  Candidates
+        (and so staircase structure) are untouched, which means the padded
+        staircase tensors can always be carried over column-sliced — no
+        rebuild, no mid-prefix hazard.
+        """
+        idx = list(indices)
+        sub = ProfileTable(
+            candidates=list(self.candidates),
+            power_caps=self.power_caps[idx],
+            latency=self.latency[:, idx],
+            run_power=self.run_power[:, idx],
+            q_fail=self.q_fail,
+        )
+        cache = getattr(self, "_staircase_cache", None)
+        if cache is not None:
+            object.__setattr__(sub, "_staircase_cache", StaircaseTensors(
+                lvl_lat=cache.lvl_lat[:, :, idx], lvl_acc=cache.lvl_acc,
+                lvl_valid=cache.lvl_valid, n_levels=cache.n_levels))
+        return sub
+
 
 def roofline_latency(flops: float, bytes_hbm: float, speed_fraction: float,
                      peak_flops: float, hbm_bw: float) -> float:
@@ -208,35 +243,97 @@ def profile_from_roofline(candidates: Sequence[Candidate],
     return ProfileTable(list(candidates), caps, lat, pw, q_fail=q_fail)
 
 
-def profile_measured(fns: Sequence[Callable[[], None]],
+def default_sync(value):
+    """Default measurement sync: block until ``value``'s leaves are ready.
+
+    ``jax.block_until_ready`` walks any pytree and calls
+    ``block_until_ready()`` on every leaf that has one (jax arrays — and the
+    fake handles the deterministic test harness emits), so it is safe on
+    callables that return plain Python values too.  Imported lazily so this
+    module stays importable without jax on the path.
+    """
+    import jax
+
+    return jax.block_until_ready(value)
+
+
+def measure_mean_latency(fns: Sequence[Callable[[], object]],
+                         warmup: int = 2,
+                         iters: int = 5,
+                         clock: Callable[[], float] | None = None,
+                         sync: Callable[[object], object] | None = None,
+                         ) -> np.ndarray:
+    """Mean wall-clock latency of each callable, synced and seam-injectable.
+
+    The single timing loop every measured profile path shares.  ``sync`` is
+    applied to each callable's return value *inside* the timed region —
+    under JAX async dispatch a jitted call returns a future-like array, and
+    timing without blocking on it measures dispatch, not compute.  Warmup
+    calls are synced too so compilation never leaks into the timed region.
+    ``clock``/``sync`` default to ``time.perf_counter`` /
+    :func:`default_sync`; deterministic tests inject a fake clock and fake
+    timed callables instead (``repro.profiling.clock``).
+    """
+    if clock is None:
+        clock = time.perf_counter
+    if sync is None:
+        sync = default_sync
+    base = np.zeros(len(fns))
+    for i, fn in enumerate(fns):
+        for _ in range(warmup):
+            sync(fn())
+        t0 = clock()
+        for _ in range(iters):
+            sync(fn())
+        base[i] = (clock() - t0) / iters
+    return base
+
+
+def extrapolate_power_buckets(base: np.ndarray, power_model: PowerModel,
+                              n_power_buckets: int,
+                              ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Spread full-clock latencies over power buckets with the 1/f rule.
+
+    Power scaling cannot be actuated on a plain host, so measured latency at
+    full clock is extrapolated to the lower caps analytically: compute-bound
+    1/f (conservative for memory-bound models — they would be faster), draw
+    at each bucket from the cubic DVFS model.  Returns ``(caps [L],
+    lat [K, L], run_power [K, L])``.
+    """
+    base = np.asarray(base, dtype=np.float64)
+    caps = power_model.buckets(n_power_buckets)
+    lat = np.zeros((len(base), len(caps)))
+    pw = np.zeros_like(lat)
+    for j, cap in enumerate(caps):
+        f = power_model.speed_fraction(cap)
+        lat[:, j] = base / f
+        pw[:, j] = power_model.power_at_fraction(f)
+    return caps, lat, pw
+
+
+def profile_measured(fns: Sequence[Callable[[], object]],
                      names: Sequence[str],
                      accuracies: Sequence[float],
                      power_model: PowerModel,
                      n_power_buckets: int = 4,
                      warmup: int = 2,
                      iters: int = 5,
-                     q_fail: float = 0.0) -> ProfileTable:
+                     q_fail: float = 0.0,
+                     clock: Callable[[], float] | None = None,
+                     sync: Callable[[object], object] | None = None,
+                     ) -> ProfileTable:
     """Measure mean wall-clock latency of real callables on this host.
 
-    Power scaling cannot be actuated on this host, so the measured latency at
-    full clock is extrapolated to the other buckets with the compute-bound
-    1/f rule — conservative for memory-bound models (they would be faster).
+    Timing goes through :func:`measure_mean_latency`, which blocks on each
+    callable's return value before reading the clock — without that, jitted
+    callables under JAX async dispatch are credited only their dispatch
+    cost.  Power buckets extrapolate analytically
+    (:func:`extrapolate_power_buckets`).
     """
-    caps = power_model.buckets(n_power_buckets)
-    base = np.zeros(len(fns))
-    for i, fn in enumerate(fns):
-        for _ in range(warmup):
-            fn()
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            fn()
-        base[i] = (time.perf_counter() - t0) / iters
-    lat = np.zeros((len(fns), len(caps)))
-    pw = np.zeros_like(lat)
-    for j, cap in enumerate(caps):
-        f = power_model.speed_fraction(cap)
-        lat[:, j] = base / f
-        pw[:, j] = power_model.power_at_fraction(f)
+    base = measure_mean_latency(fns, warmup=warmup, iters=iters,
+                                clock=clock, sync=sync)
+    caps, lat, pw = extrapolate_power_buckets(base, power_model,
+                                              n_power_buckets)
     cands = [Candidate(name=n, flops=0.0, bytes_hbm=0.0, accuracy=a)
              for n, a in zip(names, accuracies)]
     return ProfileTable(cands, caps, lat, pw, q_fail=q_fail)

@@ -1,0 +1,31 @@
+"""Live-profile harness (DESIGN.md §12): measured staircases for ALERT.
+
+Turns real registry models into the :class:`~repro.core.profiles.
+ProfileTable`\\ s the controller schedules — measured per-level latency
+and accuracy instead of synthetic staircases — with an injectable
+clock/sync seam so every deterministic test (table build, controller
+picks, gateway parity, golden traces) runs on fake measurements and only
+an opt-in smoke touches real wall clocks.
+
+* :mod:`repro.profiling.clock` — the seam: :class:`FakeClock`,
+  :class:`FakeTimedFn` (models JAX async dispatch), fake level callables;
+* :mod:`repro.profiling.harness` — callables → anytime ProfileTable
+  (synced timing, monotone Eq. 10 clamp, analytic power buckets);
+* :mod:`repro.profiling.live` — the reduced ``alert_anytime`` pipeline:
+  joint training, per-level eval accuracy, fake or engine-measured
+  latencies, one table the whole traffic stack consumes.
+"""
+
+from repro.profiling.clock import FakeClock, FakeTimedFn, fake_level_fns
+from repro.profiling.harness import (engine_level_fns, monotone_accuracies,
+                                     profile_anytime_measured)
+from repro.profiling.live import (TrainedAnytime, level_flop_fractions,
+                                  live_profile_table,
+                                  train_reduced_anytime)
+
+__all__ = [
+    "FakeClock", "FakeTimedFn", "fake_level_fns",
+    "engine_level_fns", "monotone_accuracies", "profile_anytime_measured",
+    "TrainedAnytime", "level_flop_fractions", "live_profile_table",
+    "train_reduced_anytime",
+]

@@ -1,0 +1,95 @@
+"""Injectable clock / timer seam for the live-profile harness.
+
+Measured staircases are wall-clock numbers, which makes every downstream
+consumer (table build, controller picks, sweep parity, golden traces)
+nondeterministic if tests touch real time.  DESIGN.md §12's contract: the
+measurement loop (:func:`repro.core.profiles.measure_mean_latency`) takes
+``clock``/``sync`` callables, and deterministic tests drive it with the
+fakes here — a manually-advanced :class:`FakeClock` plus
+:class:`FakeTimedFn` callables that model JAX async dispatch exactly
+(calling one "dispatches": the clock advances by the dispatch cost and a
+future-like handle comes back; blocking on the handle advances by the
+compute cost).  ``jax.block_until_ready`` duck-types on
+``block_until_ready()``, so the *production* sync path exercises the fake
+handles unchanged — the regression test for the async under-measurement
+bug runs the real ``profile_measured`` code, not a test double.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+class FakeClock:
+    """A manually-advanced monotonic clock (seconds).
+
+    Calling the instance reads the time; nothing advances it except
+    :meth:`advance` — so any latency a fake-clock measurement reports is
+    exactly the sum of advances the fake callables performed, bit-for-bit
+    reproducible across runs and platforms.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        """Read the current fake time."""
+        return self.now
+
+    def advance(self, dt: float) -> None:
+        """Move time forward by ``dt`` seconds (must be >= 0)."""
+        assert dt >= 0.0
+        self.now += float(dt)
+
+
+@dataclasses.dataclass
+class _FakeReady:
+    """The future-like value a :class:`FakeTimedFn` call returns.
+
+    Mimics a dispatched jax array: work completes (the clock advances by
+    the remaining compute time) only when something blocks on it.
+    """
+
+    clock: FakeClock
+    compute_s: float
+    _done: bool = False
+
+    def block_until_ready(self) -> "_FakeReady":
+        """Advance the clock by the outstanding compute time, once."""
+        if not self._done:
+            self._done = True
+            self.clock.advance(self.compute_s)
+        return self
+
+
+@dataclasses.dataclass
+class FakeTimedFn:
+    """A deterministic stand-in for a jitted callable under async dispatch.
+
+    Calling it advances ``clock`` by ``dispatch_s`` (the host-side cost of
+    launching the computation) and returns a :class:`_FakeReady` handle;
+    syncing the handle advances by ``compute_s`` (the device time).  A
+    timing loop that fails to sync therefore measures ``dispatch_s`` per
+    call — the exact under-measurement the harness contract exists to
+    prevent — while a correctly synced loop measures
+    ``dispatch_s + compute_s``.
+    """
+
+    clock: FakeClock
+    dispatch_s: float
+    compute_s: float
+    n_calls: int = 0
+
+    def __call__(self) -> _FakeReady:
+        """Dispatch: advance by the dispatch cost, return the handle."""
+        self.n_calls += 1
+        self.clock.advance(self.dispatch_s)
+        return _FakeReady(self.clock, self.compute_s)
+
+
+def fake_level_fns(clock: FakeClock, compute_s: list[float],
+                   dispatch_s: float = 0.0) -> list[FakeTimedFn]:
+    """One :class:`FakeTimedFn` per anytime level with the given compute
+    schedule — the deterministic stand-ins the fake-clock live profile
+    feeds to :func:`repro.core.profiles.measure_mean_latency`."""
+    return [FakeTimedFn(clock, dispatch_s, float(c)) for c in compute_s]

@@ -1,0 +1,104 @@
+"""Measured-staircase harness: callables → anytime ``ProfileTable``.
+
+:func:`profile_anytime_measured` is the one funnel every live profile goes
+through: per-level callables are timed by
+:func:`repro.core.profiles.measure_mean_latency` (synced — dispatch-only
+timing is the satellite bug this package regression-tests), accuracies are
+clamped monotone so Eq. 10's staircase premise holds by construction, and
+the result is an anytime-grouped :class:`~repro.core.profiles.ProfileTable`
+bitwise-compatible with every ``core/profiles.py`` consumer: padded
+staircase tensors, ``subset()``/``power_subset()`` sharing, the batched
+engine's weight matrix.  Power buckets extrapolate analytically on hosts
+that cannot actuate DVFS (:func:`~repro.core.profiles.
+extrapolate_power_buckets` — tagged honestly in the bench records).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.power import PowerModel
+from repro.core.profiles import (Candidate, ProfileTable,
+                                 extrapolate_power_buckets,
+                                 measure_mean_latency)
+
+
+def monotone_accuracies(accuracies: Sequence[float]) -> np.ndarray:
+    """Clamp a measured per-level accuracy sequence monotone (cummax).
+
+    Eq. 10 prices partial work by the accuracy of the last *completed*
+    level, which only rewards deeper levels if the staircase never steps
+    down.  Real jointly-trained nets can measure a tiny inversion on a
+    small eval set; the profile (like the paper's Table 2) publishes the
+    running best so a deeper level never claims less than its prefix.
+    """
+    return np.maximum.accumulate(np.asarray(accuracies, dtype=np.float64))
+
+
+def profile_anytime_measured(fns: Sequence[Callable[[], object]],
+                             accuracies: Sequence[float],
+                             power_model: PowerModel,
+                             *,
+                             group: str = "anytime",
+                             name_prefix: str = "level",
+                             n_power_buckets: int = 8,
+                             warmup: int = 2,
+                             iters: int = 5,
+                             q_fail: float = 0.0,
+                             clock: Callable[[], float] | None = None,
+                             sync: Callable[[object], object] | None = None,
+                             ) -> ProfileTable:
+    """Measure one anytime family's staircase and emit its ProfileTable.
+
+    ``fns[k]`` runs level k+1's forward pass (levels ordered shallow to
+    deep); ``accuracies[k]`` is its measured eval accuracy (clamped
+    monotone here).  ``clock``/``sync`` are the DESIGN.md §12 seam:
+    deterministic tests pass a :class:`~repro.profiling.clock.FakeClock`
+    and fake timed callables; production leaves the defaults
+    (``time.perf_counter`` + ``jax.block_until_ready``).  Raises if the
+    measured latencies are not strictly positive — a zero latency means
+    the caller timed dispatch without compute (or forgot to advance a
+    fake clock).
+    """
+    assert len(fns) == len(accuracies) and len(fns) >= 1
+    base = measure_mean_latency(fns, warmup=warmup, iters=iters,
+                                clock=clock, sync=sync)
+    if not np.all(base > 0):
+        raise ValueError(
+            f"measured non-positive level latency {base.tolist()}: the "
+            "timing loop saw no time pass — under async dispatch this "
+            "means the sync seam did not block on compute")
+    accs = monotone_accuracies(accuracies)
+    caps, lat, pw = extrapolate_power_buckets(base, power_model,
+                                              n_power_buckets)
+    n = len(fns)
+    cands = [Candidate(name=f"{name_prefix}{k + 1}", flops=0.0,
+                       bytes_hbm=0.0, accuracy=float(accs[k]),
+                       is_anytime_level=n > 1,
+                       anytime_group=group if n > 1 else None,
+                       level=k + 1)
+             for k in range(n)]
+    return ProfileTable(cands, caps, lat, pw, q_fail=q_fail)
+
+
+def engine_level_fns(engine, params, *, prompt_len: int = 8,
+                     gen_tokens: int = 4, seed: int = 0) -> list:
+    """Per-level generate closures for a :class:`ServeEngine` — the
+    real-timing measurement path (opt-in smoke only; deterministic tests
+    use :func:`repro.profiling.clock.fake_level_fns` instead).
+
+    Each closure runs a full prefill + decode generate at its level and
+    returns the sampled tokens (a host array, so the default sync is a
+    no-op on top — generate is already compute-inclusive).
+    """
+    rng = np.random.default_rng(seed)
+    vocab = engine.model.cfg.vocab
+    prompt = rng.integers(0, vocab, size=(engine.batch_size, prompt_len),
+                          dtype=np.int32)
+    return [
+        (lambda lvl=lvl: engine.generate(params, prompt, gen_tokens,
+                                         level=lvl)["tokens"])
+        for lvl in engine.levels
+    ]

@@ -1,0 +1,165 @@
+"""Live profiles of the reduced ``alert_anytime`` family, end to end.
+
+The controller's headline scenario (ROADMAP item 2): retire the synthetic
+staircases and let ALERT pick real model × nest-level × power configs.
+This module produces that table from the actual registry model:
+
+1. jointly train the width-nested anytime LM (paper §4.3 — one backward
+   pass for all levels) on the deterministic synthetic task;
+2. measure each level's REAL accuracy on held-out batches
+   (``model.train_logits(level=k)`` + ``token_accuracy`` — deterministic
+   on a fixed platform);
+3. attach per-level latencies: either deterministic fake measurements
+   driven through the §12 clock seam (compute time proportional to each
+   level's true nested-FLOP fraction — what CI and golden traces pin), or
+   real wall clocks from :class:`~repro.serving.engine.ServeEngine`'s
+   per-level compiled programs (the opt-in smoke);
+4. emit the anytime :class:`~repro.core.profiles.ProfileTable` through
+   :func:`~repro.profiling.harness.profile_anytime_measured`, power
+   buckets extrapolated analytically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs.alert_anytime import reduced
+from repro.core.nesting import StripeSpec
+from repro.core.power import PowerModel
+from repro.core.profiles import ProfileTable
+from repro.kernels.nested_matmul import nested_matmul_flops
+from repro.profiling.clock import FakeClock, fake_level_fns
+from repro.profiling.harness import (engine_level_fns,
+                                     profile_anytime_measured)
+
+
+def level_flop_fractions(cfg) -> list[float]:
+    """Per-level FLOP fraction of ``cfg``'s width-nested net.
+
+    The block-triangular stripe schedule over ``d_model`` — exactly what
+    the nested_matmul kernel executes — normalised to the dense (deepest
+    level) cost.  This is the latency schedule the fake-clock profile
+    uses, so the deterministic table has the same *shape* as a measured
+    one: inner levels cheaper, deepest level = 1.0.
+    """
+    spec = StripeSpec.pow2(cfg.d_model, cfg.nest_levels)
+    dense = nested_matmul_flops(1, spec, spec, level=cfg.nest_levels)
+    return [nested_matmul_flops(1, spec, spec, level=k) / dense
+            for k in range(1, cfg.nest_levels + 1)]
+
+
+@dataclasses.dataclass
+class TrainedAnytime:
+    """A jointly-trained reduced anytime LM plus its eval artifacts."""
+
+    model: object
+    cfg: object
+    params: object
+    accuracies: list[float]   # measured per-level, shallow -> deep
+    final_loss: float
+    q_fail: float             # random-guess accuracy on the eval task
+
+
+def train_reduced_anytime(train_steps: int = 250, seed: int = 0,
+                          eval_batches: int = 2,
+                          data_vocab: int = 32) -> TrainedAnytime:
+    """Joint-train the reduced ``alert_anytime`` config and eval levels.
+
+    Deterministic for a fixed (platform, jax version): the synthetic task,
+    init, and optimizer are all seeded, and eval batches live far past the
+    training stream.  The synthetic task uses a ``data_vocab`` sub-range
+    of the model's vocabulary — the full-width task is not learnable at
+    this model size in a profile-build budget, and the point is a
+    *separated* accuracy staircase, not LM quality.  Returns measured
+    (unclamped) per-level accuracies — the harness clamps them monotone
+    when building the table.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data.synthetic import SyntheticLM
+    from repro.models.registry import build_model
+    from repro.optim.adamw import AdamW
+    from repro.train.losses import token_accuracy
+    from repro.train.step import (init_train_state, make_anytime_loss_fn,
+                                  make_train_step)
+
+    cfg = reduced()
+    model = build_model(cfg)
+    assert data_vocab <= cfg.vocab
+    data = SyntheticLM(vocab=data_vocab, seq_len=cfg.attn_chunk,
+                       global_batch=16, noise=0.05, order=2)
+    weights = np.linspace(1.0, 2.0, cfg.nest_levels)
+    opt = AdamW(lr=8e-3)
+    state = init_train_state(model, cfg, opt, jax.random.PRNGKey(seed))
+    step = jax.jit(make_train_step(
+        model, cfg, opt,
+        loss_fn=make_anytime_loss_fn(
+            model, cfg, level_weights=list(weights / weights.sum()))))
+    metrics = {"loss": jnp.asarray(0.0)}
+    for i in range(train_steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        state, metrics = step(state, batch)
+    accs = np.zeros(cfg.nest_levels)
+    for b in range(eval_batches):
+        evalb = {k: jnp.asarray(v)
+                 for k, v in data.batch_at(10_000 + b).items()}
+        for k in range(1, cfg.nest_levels + 1):
+            logits, _ = model.train_logits(state.params, evalb, level=k)
+            accs[k - 1] += float(token_accuracy(logits, evalb["labels"]))
+    accs /= eval_batches
+    return TrainedAnytime(model=model, cfg=cfg, params=state.params,
+                          accuracies=[float(a) for a in accs],
+                          final_loss=float(metrics["loss"]),
+                          q_fail=1.0 / data_vocab)
+
+
+def live_profile_table(trained: TrainedAnytime, *,
+                       mode: str = "fake",
+                       clock: FakeClock | None = None,
+                       base_s: float = 0.05,
+                       power_model: PowerModel | None = None,
+                       n_power_buckets: int = 8,
+                       warmup: int = 1, iters: int = 3,
+                       prompt_len: int = 8, gen_tokens: int = 4,
+                       ) -> ProfileTable:
+    """Anytime ProfileTable for a trained reduced model.
+
+    ``mode="fake"`` (deterministic, the CI/golden path): level compute
+    times are ``base_s`` scaled by the level's true nested-FLOP fraction,
+    driven through :class:`~repro.profiling.clock.FakeClock` callables and
+    the real measurement loop — zero wall-clock dependence.
+
+    ``mode="measured"`` (opt-in smoke): level latencies are real wall
+    clocks of :class:`~repro.serving.engine.ServeEngine`'s per-level
+    compiled generate.  Either way, accuracies are the model's measured
+    eval accuracies and power buckets are analytic extrapolations
+    (recorded as such in the bench regime tags).
+    """
+    if power_model is None:
+        power_model = PowerModel(p_idle=60.0, p_tdp=200.0)
+    cfg = trained.cfg
+    q_fail = trained.q_fail  # random-guess accuracy on the eval task
+    if mode == "fake":
+        clk = clock if clock is not None else FakeClock()
+        fracs = level_flop_fractions(cfg)
+        fns = fake_level_fns(clk, [f * base_s for f in fracs])
+        return profile_anytime_measured(
+            fns, trained.accuracies, power_model,
+            n_power_buckets=n_power_buckets, warmup=warmup, iters=iters,
+            q_fail=q_fail, clock=clk)
+    if mode == "measured":
+        from repro.serving.engine import ServeEngine
+        engine = ServeEngine(trained.model,
+                             max_len=prompt_len + gen_tokens + 1,
+                             batch_size=2)
+        fns = engine_level_fns(engine, trained.params,
+                               prompt_len=prompt_len,
+                               gen_tokens=gen_tokens)
+        return profile_anytime_measured(
+            fns, trained.accuracies, power_model,
+            n_power_buckets=n_power_buckets, warmup=warmup, iters=iters,
+            q_fail=q_fail)
+    raise ValueError(f"mode must be 'fake' or 'measured', got {mode!r}")

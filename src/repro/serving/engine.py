@@ -65,31 +65,48 @@ class ServeEngine:
             return tfm.init_caches(lvl_cfg, self.batch_size, self.max_len)
         return self.model.init_caches(self.batch_size, self.max_len)
 
+    def n_compiles(self) -> tuple[int, int]:
+        """(prefill, decode) trace counts summed across level executables.
+
+        The §8 zero-recompile contract at request granularity: after one
+        warmup per level, switching levels between requests must leave both
+        counts flat (one trace per level executable, ever).
+        """
+        return (sum(f._cache_size() for f in self._prefill.values()),
+                sum(f._cache_size() for f in self._decode.values()))
+
     def generate(self, params, prompt: np.ndarray, n_new: int,
                  level: int | None = None,
-                 deadline_s: float | None = None) -> dict:
+                 deadline_s: float | None = None,
+                 clock=None) -> dict:
         """Greedy-decode ``n_new`` tokens after ``prompt`` [B, S0].
 
         Anytime semantics: when ``level`` is None and the model is nested,
         runs at the deepest level; a deadline (wall-clock seconds) makes
         generate return whatever tokens are complete at expiry (paper
-        Eq. 10 staircase measured for real).
+        Eq. 10 staircase measured for real).  Prefill and every decode step
+        run through the per-level compiled executables (zero recompiles
+        after warmup — assert with :meth:`n_compiles`).  ``clock`` injects
+        the timebase (default ``time.perf_counter``) so deterministic tests
+        drive deadlines and reported latency without real wall clocks; the
+        reported latency is compute-inclusive because every step's tokens
+        are materialised on host before the final clock read.
         """
-        t0 = time.perf_counter()
+        if clock is None:
+            clock = time.perf_counter
+        t0 = clock()
         cfg = self.model.cfg
         lvl = level if level is not None else \
             (cfg.nest_levels if cfg.nest_levels > 1 else None)
         b, s0 = prompt.shape
-        out = tfm.lm_apply(params, cfg, jnp.asarray(prompt),
-                           mode="prefill", level=lvl)
+        out = self._prefill[lvl](params, {"tokens": jnp.asarray(prompt)})
         caches = self._merge(self.init_caches(lvl), out.caches)
         logits = out.logits if not isinstance(out.logits, list) \
             else out.logits[-1]
         next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         toks = [np.asarray(next_tok)]
         for i in range(n_new - 1):
-            if deadline_s is not None and \
-                    time.perf_counter() - t0 > deadline_s:
+            if deadline_s is not None and clock() - t0 > deadline_s:
                 break
             step = {"tokens": next_tok,
                     "cache_len": jnp.asarray(s0 + i, jnp.int32)}
@@ -101,7 +118,7 @@ class ServeEngine:
             toks.append(np.asarray(next_tok))
         return {
             "tokens": np.concatenate(toks, axis=1),
-            "latency": time.perf_counter() - t0,
+            "latency": clock() - t0,
             "level": lvl,
             "complete": len(toks) == n_new,
         }

@@ -36,7 +36,9 @@ from repro.traffic.faults import (FAULT_KINDS, Brownout, DeviceLoss,
                                   KalmanLaneDetector, LaneStraggler,
                                   scenario)
 from repro.traffic.gateway import GatewayResult, SessionGateway
-from repro.traffic.loadsweep import hindsight_static_config, sweep_loads
+from repro.traffic.loadsweep import (app_only_table,
+                                     hindsight_static_config,
+                                     sweep_loads, sys_only_table)
 from repro.traffic.megatick import MegatickGateway
 
 __all__ = [
@@ -44,7 +46,8 @@ __all__ = [
     "FlashCrowdProcess", "TenantSpec", "Session", "TrafficRequest",
     "build_sessions", "generate_requests", "SessionGateway",
     "GatewayResult", "MegatickGateway", "hindsight_static_config",
-    "sweep_loads", "FaultSchedule", "LaneStraggler", "DeviceLoss",
+    "sweep_loads", "app_only_table", "sys_only_table", "FaultSchedule",
+    "LaneStraggler", "DeviceLoss",
     "DVFSDrift", "Brownout", "KalmanLaneDetector", "scenario",
     "FAULT_KINDS",
 ]

@@ -42,6 +42,34 @@ def hindsight_static_config(table: ProfileTable,
     return res.config
 
 
+def app_only_table(table: ProfileTable) -> ProfileTable:
+    """Application-only adaptation baseline (paper Table-style competitor).
+
+    The controller keeps its full model/anytime-level freedom but the
+    platform never actuates power: the table is pinned to the system
+    default — the highest cap, race-to-idle, exactly what
+    ``FleetSim.run_streams(power_control=False)`` executes.  Column
+    slicing (:meth:`~repro.core.profiles.ProfileTable.power_subset`)
+    carries the padded staircase tensors over intact.
+    """
+    return table.power_subset([len(table.power_caps) - 1])
+
+
+def sys_only_table(table: ProfileTable) -> ProfileTable:
+    """System-only adaptation baseline (paper Table-style competitor).
+
+    The application is frozen at its most-accurate configuration (the
+    deployment default) and only the platform adapts — the controller
+    keeps its full power freedom over a single-candidate table.  For an
+    anytime family this cuts the staircase mid-prefix, which
+    :meth:`~repro.core.profiles.ProfileTable.subset` correctly degrades
+    to a 1-level staircase: no early-exit credit, a missed deadline pays
+    ``q_fail``, exactly the fixed-app semantics.
+    """
+    top = int(np.argmax(table.accuracies))
+    return table.subset([top])
+
+
 def sweep_loads(table: ProfileTable, mix: Sequence[TenantSpec],
                 loads: Sequence[float], *, n_lanes: int,
                 horizon: float, seed: int = 0,
@@ -58,6 +86,13 @@ def sweep_loads(table: ProfileTable, mix: Sequence[TenantSpec],
     rate, and per scheme: goodput, p50/p99 sojourn, served-miss /
     reject / SLO-miss rates, energy per request and per good request,
     paging and compile counters.
+
+    Schemes: ``alert`` (full controller), ``oracle_static`` (hindsight
+    single config), ``alert_no_admission`` (shedding ablation), and the
+    paper's Table-style adaptation baselines ``app_only`` /``sys_only``
+    (:func:`app_only_table` / :func:`sys_only_table` — the same alert
+    controller run over power- or candidate-restricted tables, so ALERT's
+    config space strictly contains both).
 
     ``gateway="megatick"`` serves every scheme through the
     device-resident :class:`~repro.traffic.megatick.MegatickGateway`
@@ -100,6 +135,19 @@ def sweep_loads(table: ProfileTable, mix: Sequence[TenantSpec],
         # buys.
         gw_noadm = GW(table, n_lanes, max_queue=None,
                       tick=tick, min_feasible_latency=0.0, obs=obs)
+    gw_app = gw_sys = None
+    if "app_only" in schemes:
+        # Paper Table-style competitor: DNN adaptation only, power pinned
+        # at the system default.  Same controller, same gateway machinery,
+        # over the column-restricted table — so megatick parity and
+        # compile accounting hold by construction.
+        gw_app = GW(app_only_table(table), n_lanes, max_queue=max_queue,
+                    tick=tick, obs=obs)
+    if "sys_only" in schemes:
+        # Paper Table-style competitor: power adaptation only, application
+        # frozen at its most-accurate config (single-candidate table).
+        gw_sys = GW(sys_only_table(table), n_lanes, max_queue=max_queue,
+                    tick=tick, obs=obs)
     rows = []
     for li, load in enumerate(loads):
         sessions = build_sessions([t.scaled(load) for t in mix], horizon,
@@ -118,6 +166,10 @@ def sweep_loads(table: ProfileTable, mix: Sequence[TenantSpec],
             elif scheme == "oracle_static":
                 res = gw_static.run(sessions, requests, policy="static",
                                     static_config=static_cfg)
+            elif scheme == "app_only":
+                res = gw_app.run(sessions, requests)
+            elif scheme == "sys_only":
+                res = gw_sys.run(sessions, requests)
             else:
                 raise ValueError(scheme)
             row["schemes"][scheme] = {

@@ -156,12 +156,70 @@ def compute_straggler_golden(table) -> dict:
     }
 
 
+def live_profile_config(trained=None):
+    """Fixed live-profile gateway scenario (DESIGN.md §12) shared by the
+    generator and ``tests/test_profiling.py``: the reduced
+    ``alert_anytime`` family jointly trained on the seeded synthetic
+    task, its staircase measured through the FAKE clock seam (zero
+    wall-clock dependence — this fixture is bit-reproducible), served
+    at ~1.2x lane saturation in the coarse-tick regime so the same
+    config also pins megatick parity.  ``trained`` lets the test module
+    reuse its one default-parameter training run; the generator trains
+    fresh."""
+    from repro.core.controller import Constraints, Goal
+    from repro.profiling import live_profile_table, train_reduced_anytime
+    from repro.serving.sim import DEFAULT_ENV
+    from repro.traffic import PoissonProcess, TenantSpec, build_sessions
+
+    if trained is None:
+        trained = train_reduced_anytime()
+    table = live_profile_table(trained)
+    deadline = 2.0 * float(table.latency[-1, -1])
+    n_lanes, n_sessions = 8, 24
+    cons = Constraints(deadline=deadline, accuracy_goal=0.40)
+    mix = [TenantSpec("live", Goal.MINIMIZE_ENERGY, cons,
+                      PoissonProcess(
+                          1.2 * (n_lanes / deadline) / n_sessions),
+                      n_sessions=n_sessions, phases=DEFAULT_ENV)]
+    sessions = build_sessions(mix, 12 * deadline, seed=GOLDEN_SEED)
+    return table, sessions, n_lanes, deadline
+
+
+def compute_live_profile_golden(config=None) -> dict:
+    """Golden live-profile trace: the measured (fake-clock) staircase the
+    trained model profiles to, and the controller's per-level / per-cap
+    pick histogram plus dispositions when ALERT serves the seed-1
+    workload from that table.  Pins the WHOLE measured path: training,
+    eval accuracy, the clock seam, table assembly, and selection."""
+    from repro.traffic import SessionGateway, generate_requests
+    from repro.traffic.gateway import SERVED
+
+    table, sessions, n_lanes, deadline = \
+        config if config is not None else live_profile_config()
+    gw = SessionGateway(table, n_lanes, tick=deadline,
+                        max_queue=4 * n_lanes)
+    res = gw.run(sessions, generate_requests(sessions))
+    out = summarize_gateway(res)
+    served = res.status == SERVED
+    k, l = table.latency.shape
+    out["level_accuracies"] = [float(a) for a in table.accuracies]
+    out["level_latencies_full_cap"] = [float(x)
+                                       for x in table.latency[:, -1]]
+    out["q_fail"] = float(table.q_fail)
+    out["model_picks"] = [int((res.model_index[served] == i).sum())
+                          for i in range(k)]
+    out["power_picks"] = [int((res.power_index[served] == j).sum())
+                          for j in range(l)]
+    return out
+
+
 def compute_golden() -> dict:
     table, cons = golden_config()
     out = {"seed": GOLDEN_SEED, "budget_w": GOLDEN_BUDGET_W,
            "goal": "maximize_accuracy", "envs": {},
            "gateway": compute_gateway_golden(table),
-           "straggler": compute_straggler_golden(table)}
+           "straggler": compute_straggler_golden(table),
+           "live_profile": compute_live_profile_golden()}
     for env_name in ("default", "cpu", "memory"):
         trace = EnvironmentTrace(ENVS[env_name], seed=GOLDEN_SEED)
         sim = InferenceSim(table, trace)

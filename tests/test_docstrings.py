@@ -18,7 +18,7 @@ import pytest
 
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
 LINTED_PACKAGES = ("core", "serving", "traffic", "kernels", "runtime",
-                   "checkpoint", "obs")
+                   "checkpoint", "obs", "profiling")
 
 
 def _iter_py_files():
@@ -78,4 +78,4 @@ def test_gate_covers_both_packages():
             "gateway.py", "workloads.py", "loadsweep.py",
             "alert_select.py", "ops.py", "faults.py", "straggler.py",
             "io.py", "metrics.py", "spans.py", "ring.py",
-            "report.py"} <= files
+            "report.py", "clock.py", "harness.py", "live.py"} <= files
